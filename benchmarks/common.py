@@ -1,0 +1,58 @@
+"""Shared helpers for the per-figure benchmarks.
+
+Every benchmark prints CSV rows ``name,us_per_call,derived`` where
+``us_per_call`` is the simulated (virtual-time) microseconds per KV
+operation at the row's operating point and ``derived`` carries the
+figure-specific quantity (normalized throughput, model error, ...).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import workloads
+from repro.core.kvstore import LSMStore, TreeIndexStore, TwoTierCacheStore, run_trace
+from repro.core.latency_model import US, OpParams
+from repro.core.simulator import SimConfig, best_over_threads, simulate, trace_source
+
+L_SWEEP_US = (0.1, 0.3, 0.5, 1, 2, 3, 5, 8, 10)
+N_CANDIDATES = (16, 24, 32, 48, 64)
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.4f},{derived}")
+
+
+def sweep_trace(src, l_us_list=L_SWEEP_US, n_ops=5000, P=12, seed=7, **cfg_kw):
+    """Best-over-threads throughput per latency point (paper protocol)."""
+    out = {}
+    for l_us in l_us_list:
+        cfg = SimConfig(L_mem=l_us * US, P=P, seed=seed, **cfg_kw)
+        r, n = best_over_threads(cfg, src, n_ops, candidates=N_CANDIDATES)
+        out[l_us] = r
+    return out
+
+
+def build_engines(nk=100_000, nops=30_000):
+    """The three engines with their default (paper Table 5-ish) workloads."""
+    return {
+        "aerospike-like": (
+            TreeIndexStore(nk, seed=1),
+            workloads.uniform(nk, nops, (1, 0), seed=2),
+        ),
+        "rocksdb-like": (
+            LSMStore(nk),
+            workloads.zipf(nk, nops, 0.99, (1, 0), seed=3),
+        ),
+        "cachelib-like": (
+            TwoTierCacheStore(nk, seed=4),
+            workloads.gaussian(nk, nops, 0.08, (2, 1), seed=5),
+        ),
+    }
+
+
+def engine_trace(name, store, wl):
+    tr = run_trace(store, wl)
+    p = tr.op_params(store.times, P=12, T_sw=0.05 * US)
+    return tr, p, trace_source(tr.ops)

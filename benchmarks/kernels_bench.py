@@ -1,0 +1,75 @@
+"""Kernel benchmarks: arithmetic intensity + modeled TPU-v5e time.
+
+This container has no TPU, so wall-clock timings would measure the Python
+interpreter, not the kernel. Instead each kernel's FLOPs and HBM bytes are
+counted analytically from its blocking structure, and the modeled time is
+max(flops/197T, bytes/819G) -- the same roofline the dry-run uses. The
+derived column reports arithmetic intensity and whether the kernel is MXU-
+or HBM-bound at its default tile sizes, plus the paged kernel's prefetch-
+pipeline efficiency from the paper's Theta model at host-memory latency.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.latency_model import OpParams, theta_prob_inv
+from repro.core.tiering import TPU_HOST
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+from .common import emit
+
+
+def _model_time(flops: float, bytes_: float) -> tuple[float, str]:
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    return max(t_c, t_m), ("mxu" if t_c >= t_m else "hbm")
+
+
+def flash_attention_bench() -> None:
+    D = 128
+    for B, Hq, Hkv, S in ((8, 32, 8, 4096), (1, 32, 8, 32768)):
+        flops = 4.0 * B * Hq * S * S * D / 2        # causal: half the blocks
+        bytes_ = 2 * B * S * D * (Hq + 2 * Hkv)     # q read + kv streamed
+        bytes_ += 2 * B * S * Hq * D                # out write
+        t, bound = _model_time(flops, bytes_)
+        ai = flops / bytes_
+        emit(f"kernels/flash/B{B}S{S}", t * 1e6,
+             f"AI={ai:.0f};bound={bound}")
+
+
+def paged_decode_bench() -> None:
+    D, page = 128, 64
+    for B, Hq, Hkv, S in ((128, 32, 8, 32768),):
+        pages = S // page
+        flops = 4.0 * B * Hq * S * D
+        bytes_ = 2 * B * pages * page * Hkv * D * 2   # kv pages streamed
+        t, bound = _model_time(flops, bytes_)
+        emit(f"kernels/paged_decode/B{B}S{S}", t * 1e6,
+             f"AI={flops/bytes_:.1f};bound={bound}")
+        # prefetch-pipeline efficiency at host-memory latency, via the
+        # paper's model: per-page compute vs fetch latency and depth P.
+        t_page = (4.0 * Hq * page * D) / PEAK_FLOPS + 2e-7
+        other = 2 * (flops / B) / PEAK_FLOPS         # rest of layer approx
+        p = OpParams(M=float(pages), T_mem=t_page, T_io_pre=other / 2,
+                     T_io_post=other / 2, T_sw=0.0, P=4)
+        inv4 = theta_prob_inv(np.array([TPU_HOST.latency]), p)[0]
+        inv16 = theta_prob_inv(np.array([TPU_HOST.latency]),
+                               OpParams(M=float(pages), T_mem=t_page,
+                                        T_io_pre=other / 2, T_io_post=other / 2,
+                                        T_sw=0.0, P=16))[0]
+        plateau = pages * t_page + other
+        emit("kernels/paged_decode/pipeline_eff_P4", inv4 * 1e6,
+             f"eff={plateau / inv4:.3f}")
+        emit("kernels/paged_decode/pipeline_eff_P16", inv16 * 1e6,
+             f"eff={plateau / inv16:.3f}")
+
+
+def wkv6_bench() -> None:
+    B, S, H, D = 8, 4096, 40, 64
+    flops = B * S * H * (3 * D * D + 4 * D) * 1.0
+    bytes_ = 2 * B * S * H * D * 5                   # r,k,v,w in + out
+    t, bound = _model_time(flops, bytes_)
+    emit(f"kernels/wkv6/B{B}S{S}", t * 1e6, f"AI={flops/bytes_:.1f};bound={bound}")
+
+
+ALL = [flash_attention_bench, paged_decode_bench, wkv6_bench]

@@ -1,0 +1,44 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+``python -m benchmarks.run``            -- paper figures + kernels + roofline
+``python -m benchmarks.run --only fig11``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter on bench names")
+    args = ap.parse_args()
+
+    from . import kernels_bench, paper_figs, roofline_table
+
+    benches = [(f.__name__, f) for f in paper_figs.ALL]
+    benches += [(f.__name__, f) for f in kernels_bench.ALL]
+    benches += [("roofline_table", roofline_table.main)]
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"bench/{name}/wall,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+            print(f"bench/{name}/wall,0,FAILED:{type(e).__name__}:{e}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Serve a small model with batched requests over the tiered paged KV cache.
+
+The page store is the "microsecond-latency memory" of the paper; decode
+attention reaches it only through the DMA-prefetch kernel, and the prefetch
+depth is sized by the paper's Theta model for the configured tier latency.
+
+Run:  PYTHONPATH=src python examples/serve_tiered_kv.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS, smoke_config
+from repro.core.tiering import CXL_MICROSECOND, TPU_HOST
+from repro.serve.engine import Request, ServeEngine
+
+cfg = smoke_config(ARCHS["qwen2.5-3b"]).replace(sliding_window=None)
+eng = ServeEngine(cfg, n_pages=128, page_size=8, max_slots=4, seed=0)
+
+rng = np.random.default_rng(0)
+reqs = [
+    Request(rid=i, prompt=rng.integers(1, cfg.vocab, rng.integers(4, 20)).astype(np.int32),
+            max_new_tokens=8)
+    for i in range(10)
+]
+for r in reqs:
+    eng.submit(r)
+
+t0 = time.time()
+done = eng.run(max_steps=400)
+wall = time.time() - t0
+tokens = sum(len(r.out_tokens) for r in done)
+print(f"served {len(done)} requests, {tokens} tokens in {eng.steps} engine "
+      f"steps ({wall:.1f}s on CPU-interpret)")
+print(f"page utilization at end: {eng.cache.utilization:.0%} "
+      f"(all pages released: {len(eng.cache.free) == eng.cache.cfg.n_pages})")
+
+# model-driven prefetch depth for two slow-tier choices
+eng.cache.admit(999, 64)
+for tier in (TPU_HOST, CXL_MICROSECOND):
+    eng.cache.cfg = eng.cache.cfg.__class__(**{**eng.cache.cfg.__dict__, "tier": tier})
+    depth = eng.cache.plan_prefetch_depth(t_page_compute=2e-6, t_step_other=30e-6)
+    print(f"planned DMA prefetch depth for {tier.name} "
+          f"(L={tier.latency*1e6:.1f}us): P={depth}")
+eng.cache.release(999)
+print("first request sample output:", done[0].out_tokens)

@@ -1,0 +1,75 @@
+"""End-to-end driver: train a ~100M-parameter dense LM on synthetic data.
+
+The full run (300 steps, global batch 8 x 256 tokens) takes a while on one
+CPU core; ``--steps`` shortens it. Demonstrates the whole training stack:
+data pipeline -> sharded/jit train step -> AdamW -> async checkpointing ->
+restart-safe loop. Resume works: re-running continues from the last
+checkpoint.
+
+Run:  PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import argparse
+import math
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.roofline.analysis import count_params
+from repro.train.train_step import TrainHParams
+from repro.train.trainer import Trainer
+from repro.zoo import get_api
+
+CFG_100M = ModelConfig(
+    name="dense-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    d_ff=2048,
+    vocab=8192,
+    tie_embeddings=True,
+).resolve()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    api = get_api(CFG_100M)
+    n = count_params(api.param_specs(CFG_100M))
+    print(f"model: {n/1e6:.1f}M params "
+          f"({CFG_100M.n_layers}L x {CFG_100M.d_model}d, vocab {CFG_100M.vocab})")
+
+    hp = TrainHParams(peak_lr=6e-4, warmup=max(args.steps // 20, 5),
+                      total_steps=args.steps)
+    tr = Trainer(CFG_100M, hp, ckpt_dir=args.ckpt, ckpt_every=50)
+    tr.hp_global_batch, tr.hp_seq_len = args.batch, args.seq
+
+    t0 = time.time()
+    state, log = tr.fit(args.steps)
+    if not log:
+        print("nothing to do (already trained to --steps; delete --ckpt to redo)")
+        return
+    wall = time.time() - t0
+    tokens = args.batch * args.seq * len(log)
+    print(f"\ntrained {len(log)} steps, {tokens/1e3:.0f}k tokens, "
+          f"{wall:.0f}s ({tokens/wall:.0f} tok/s)")
+    k = max(len(log) // 12, 1)
+    for i in range(0, len(log), k):
+        m = log[i]
+        print(f"  step {i:4d}  loss {float(m.get('loss', 0)):6.3f}  "
+              f"gnorm {float(m.get('grad_norm', 0)):6.2f}")
+    first = sum(float(m["loss"]) for m in log[:5]) / min(5, len(log))
+    last = sum(float(m["loss"]) for m in log[-5:]) / min(5, len(log))
+    print(f"loss: {first:.3f} -> {last:.3f} "
+          f"(floor ~= noise entropy {0.25 * math.log(CFG_100M.vocab):.2f}+)")
+
+
+if __name__ == "__main__":
+    main()

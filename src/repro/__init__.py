@@ -1,0 +1,2 @@
+"""repro: microsecond-latency-memory KV-store paper as a JAX/TPU framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,17 @@
+"""Core of the reproduction: the paper's analytical model, the discrete-event
+simulator standing in for the FPGA testbed, the KV-store engines, and the
+model-driven planner reused by the TPU serving engine."""
+from . import kvstore, latency_model, planner, simulator, tiering, workloads  # noqa: F401
+from .latency_model import (  # noqa: F401
+    OpParams,
+    SystemParams,
+    cost_performance_ratio,
+    theta_best_inv,
+    theta_extended_inv,
+    theta_mask_inv,
+    theta_mem_inv,
+    theta_multi_inv,
+    theta_prob_inv,
+    theta_single_inv,
+)
+from .simulator import Op, SimConfig, SimResult, simulate  # noqa: F401

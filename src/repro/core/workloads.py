@@ -1,0 +1,93 @@
+"""Key-distribution and read-write-mix workload generators (Table 5).
+
+The paper drives Aerospike with uniform / Zipf-1.1 keys, RocksDB with
+Zipf-0.99 / Zipf-0.8, and CacheLib with Gaussian and the CacheBench
+"graph cache leader" key distribution; read:write mixes are 1:0, 2:1, 1:1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["Workload", "uniform", "zipf", "gaussian", "graph_cache_leader"]
+
+
+@dataclass(frozen=True)
+class Workload:
+    """A stream of (key, is_write) pairs over an integer key space."""
+
+    name: str
+    keys: np.ndarray           # int64 key ids in [0, n_keys)
+    is_write: np.ndarray       # bool per op
+    n_keys: int
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    def pairs(self) -> Iterator[tuple[int, bool]]:
+        return zip(self.keys.tolist(), self.is_write.tolist())
+
+
+def _mix(n_ops: int, read_write: tuple[int, int], rng: np.random.Generator):
+    r, w = read_write
+    if w == 0:
+        return np.zeros(n_ops, dtype=bool)
+    return rng.random(n_ops) < (w / (r + w))
+
+
+def uniform(
+    n_keys: int, n_ops: int, read_write=(1, 0), seed: int = 0
+) -> Workload:
+    rng = np.random.default_rng(seed)
+    return Workload(
+        "uniform", rng.integers(0, n_keys, n_ops), _mix(n_ops, read_write, rng), n_keys
+    )
+
+
+def zipf(
+    n_keys: int, n_ops: int, exponent: float = 0.99, read_write=(1, 0), seed: int = 0
+) -> Workload:
+    """Bounded Zipf over [0, n_keys): P(rank r) ~ 1 / r^exponent.
+
+    Ranks are scattered over the key space with a fixed permutation hash so
+    hot keys are not spatially clustered (as in real stores).
+    """
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    pmf = ranks ** (-exponent)
+    cdf = np.cumsum(pmf)
+    cdf /= cdf[-1]
+    draws = np.searchsorted(cdf, rng.random(n_ops))
+    # multiplicative-hash permutation of ranks -> key ids
+    keys = (draws.astype(np.uint64) * np.uint64(2654435761)) % np.uint64(n_keys)
+    return Workload(
+        f"zipf{exponent}", keys.astype(np.int64), _mix(n_ops, read_write, rng), n_keys
+    )
+
+
+def gaussian(
+    n_keys: int, n_ops: int, sigma_frac: float = 0.08, read_write=(2, 1), seed: int = 0
+) -> Workload:
+    """CacheBench-style Gaussian popularity around a moving working-set center."""
+    rng = np.random.default_rng(seed)
+    center = n_keys / 2.0
+    keys = rng.normal(center, sigma_frac * n_keys, n_ops)
+    keys = np.clip(np.round(keys), 0, n_keys - 1).astype(np.int64)
+    return Workload("gaussian", keys, _mix(n_ops, read_write, rng), n_keys)
+
+
+def graph_cache_leader(
+    n_keys: int, n_ops: int, read_write=(2, 1), seed: int = 0
+) -> Workload:
+    """Approximation of CacheBench's graph-cache-leader key distribution:
+    a heavy-tailed mixture -- a small hot set (Zipf 0.9) plus a uniform
+    scan component, which is what the Meta social-graph leader traces
+    look like (Berg et al., OSDI'20)."""
+    rng = np.random.default_rng(seed)
+    hot = zipf(max(n_keys // 20, 1), n_ops, 0.9, (1, 0), seed + 1).keys
+    cold = rng.integers(0, n_keys, n_ops)
+    take_hot = rng.random(n_ops) < 0.8
+    keys = np.where(take_hot, hot, cold).astype(np.int64)
+    return Workload("graph_cache_leader", keys, _mix(n_ops, read_write, rng), n_keys)

@@ -1,0 +1,165 @@
+"""Logical-axis -> mesh-axis rules: FSDP x TP x EP (x SP) in one table.
+
+Two rule tables, because the same logical name means different things on a
+weight and on an activation:
+
+  * **param rules** -- weights are 2-D sharded: the 'embed' (row) dimension
+    is FSDP-sharded over the data axis (and the pod axis on multi-pod
+    meshes), while 'mlp' / 'heads_flat' / 'vocab' / 'expert' columns are
+    tensor/expert-parallel over the model axis. XLA GSPMD inserts the
+    per-layer all-gathers (FSDP) and the row-parallel reduce-scatters (TP)
+    automatically from these specs.
+  * **activation rules** -- 'batch' is data(+pod)-parallel, the hidden
+    'mlp'/'heads' dimensions are model-parallel, 'embed' is replicated.
+    'seq' is optionally sequence-parallel (set ``seq_shard=True`` for the
+    long-context shapes).
+
+Keeping both in one module means a new architecture only has to name its
+axes; no per-tensor hand sharding anywhere in the model zoo.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.layers import logical_to_pspec, param_shardings
+
+__all__ = [
+    "param_rules",
+    "act_rules",
+    "state_shardings",
+    "batch_shardings",
+    "batch_axes",
+]
+
+
+def _batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def batch_axes(mesh: Mesh):
+    return _batch_axes(mesh)
+
+
+def param_rules(mesh: Mesh, fsdp: bool = True, policy: str = "baseline") -> dict[str, Any]:
+    """Weight sharding: FSDP on 'embed' rows x TP/EP on the model axis.
+
+    Policies (the hillclimb levers, EXPERIMENTS.md SSPerf):
+      baseline -- FSDP(data) x TP(model)
+      dp2d     -- no tensor parallelism: weights fully sharded over BOTH
+                  axes (FSDP over data x model); right for small models
+                  where TP all-reduces dominate
+      sp       -- baseline weights + sequence-parallel activations
+      serve    -- TP-resident weights, NO FSDP: there is no optimizer state
+                  at inference, so weights live sharded over the model axis
+                  and are never all-gathered (kills the decode cells'
+                  dominant collective)
+    """
+    if policy == "dp2d":
+        ba = _batch_axes(mesh)
+        both = (ba, "model") if isinstance(ba, str) else (*ba, "model")
+        return {
+            "embed": both, "embed2": None, "mlp": None, "heads_flat": None,
+            "heads": None, "vocab": None, "expert": None, "expert_mlp": None,
+            "expert_group": both, "layers": None, "seq": None, "batch": None,
+        }
+    return {
+        "embed": None if (policy == "serve" or not fsdp) else _batch_axes(mesh),
+        "embed2": None,
+        "mlp": "model",
+        "heads_flat": "model",
+        "heads": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_mlp": None,
+        "expert_group": _batch_axes(mesh),
+        "layers": None,
+        "seq": None,
+        "batch": None,
+    }
+
+
+def act_rules(mesh: Mesh, seq_shard: bool = False, policy: str = "baseline") -> dict[str, Any]:
+    """Activation sharding: DP batch, TP hidden, optional SP sequence."""
+    ba = _batch_axes(mesh)
+    if policy == "dp2d":
+        both = (ba, "model") if isinstance(ba, str) else (*ba, "model")
+        return {
+            "batch": both, "seq": None, "embed": None, "embed2": None,
+            "mlp": None, "heads_flat": None, "heads": None, "vocab": None,
+            "expert": None, "expert_mlp": None, "expert_group": both,
+            "seq_res": None, "layers": None,
+        }
+    return {
+        "batch": ba,
+        "seq": None,  # never 'model': q/k/v constraints carry head sharding
+        "seq_res": "model" if (seq_shard or policy == "sp") else None,
+        "embed": None,
+        "embed2": None,
+        "mlp": "model",
+        "heads_flat": "model",
+        "heads": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_mlp": None,
+        "expert_group": ba,
+        "layers": None,
+    }
+
+
+def state_shardings(specs, mesh: Mesh, fsdp: bool = True, policy: str = "baseline"):
+    """NamedSharding tree for a ParamSpec tree (weights + optimizer moments,
+    which inherit their parameter's sharding)."""
+    return param_shardings(specs, mesh, param_rules(mesh, fsdp, policy))
+
+
+def _dp_size(mesh: Mesh, policy: str = "baseline") -> int:
+    size = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        size *= mesh.shape["pod"]
+    if policy == "dp2d":
+        size *= mesh.shape["model"]
+    return size
+
+
+def batch_shardings(batch_specs: dict, mesh: Mesh, policy: str = "baseline") -> dict:
+    """Input batches are sharded on their leading (batch) dimension only;
+    a batch smaller than the data-parallel extent stays replicated (the
+    long_500k single-sequence shapes are model-parallel-only work)."""
+    ba = _batch_axes(mesh)
+    if policy == "dp2d":
+        ba = (ba, "model") if isinstance(ba, str) else (*ba, "model")
+    dp = _dp_size(mesh, policy)
+
+    def one(s):
+        lead = ba if s.shape and s.shape[0] % dp == 0 else None
+        spec = P(lead, *([None] * (len(s.shape) - 1)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_shardings(cache_specs, mesh: Mesh, batch_dim: int = 1):
+    """Decode caches: shard the batch dimension (layer-stacked pytrees have
+    batch at dim 1) and -- for the big (layers, B, S, H, D) KV stacks --
+    the sequence dimension over the model axis, so a 32k x 128-seq cache
+    spreads over the whole mesh instead of one data row. Attention over a
+    sequence-sharded cache lowers to a partial-softmax + all-reduce, which
+    the dry-run validates. Divisibility guards keep batch-1 shapes valid."""
+    ba = _batch_axes(mesh)
+    dp = _dp_size(mesh)
+    mp = mesh.shape["model"]
+
+    def one(s):
+        spec: list = [None] * len(s.shape)
+        bd = batch_dim if len(s.shape) > batch_dim else 0
+        if s.shape and s.shape[bd] % dp == 0:
+            spec[bd] = ba
+        if len(s.shape) >= 5 and s.shape[2] % mp == 0 and s.shape[2] >= mp * 128:
+            spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_specs)

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``*_ref`` is a direct, unoptimized statement of the math; kernel tests
+sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "paged_decode_attention_ref", "wkv6_ref"]
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,              # (B, S, Hq, D)
+    k: jnp.ndarray,              # (B, S, Hkv, D)
+    v: jnp.ndarray,
+    causal: bool = True,
+    sliding_window: int | None = None,
+) -> jnp.ndarray:
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) / math.sqrt(D)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if sliding_window is not None:
+        mask &= pos[:, None] - pos[None, :] < sliding_window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_decode_attention_ref(
+    q: jnp.ndarray,              # (B, Hq, D) -- one new token per sequence
+    k_pages: jnp.ndarray,        # (P, page, Hkv, D) page store ("slow tier")
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,   # (B, pages_per_seq) int32
+    lengths: jnp.ndarray,        # (B,) valid tokens per sequence
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    page = k_pages.shape[1]
+    Hkv = k_pages.shape[2]
+    rep = Hq // Hkv
+    ppseq = block_tables.shape[1]
+    # gather each sequence's pages into a contiguous (B, ppseq*page, Hkv, D)
+    k_seq = k_pages[block_tables].reshape(B, ppseq * page, Hkv, D)
+    v_seq = v_pages[block_tables].reshape(B, ppseq * page, Hkv, D)
+    kk = jnp.repeat(k_seq, rep, axis=2)
+    vv = jnp.repeat(v_seq, rep, axis=2)
+    s = jnp.einsum(
+        "bhd,bkhd->bhk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) / math.sqrt(D)
+    valid = jnp.arange(ppseq * page)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bhk,bkhd->bhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def wkv6_ref(
+    r: jnp.ndarray,              # (B, S, H, D)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_w: jnp.ndarray,          # (B, S, H, D), <= 0
+    u: jnp.ndarray,              # (H, D)
+) -> jnp.ndarray:
+    """Sequential WKV recurrence (fp32):
+    out_t = r_t . (S_{t-1} + (u*k_t) v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    B, S, H, D = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    wf = jnp.exp(log_w.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        out = jnp.einsum("bhd,bhde->bhe", rt, state + uf[None, :, :, None] * kv)
+        new = state * wt[..., None] + kv
+        return new, out
+
+    s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (rf, kf, vf, wf))
+    _, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype)

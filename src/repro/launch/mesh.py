@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state. Single-pod: (16, 16) = 256 chips, axes
+(data, model). Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model);
+the pod axis composes with data for the batch dimension (DCN-crossing
+gradient all-reduce), model parallelism stays inside a pod (ICI).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int | None = None, model: int = 1):
+    """Mesh over whatever devices exist (tests, smoke runs, examples)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,182 @@
+"""ShapeDtypeStruct stand-ins + sharding assignments for every dry-run cell.
+
+``cell(arch, shape, mesh)`` returns everything ``dryrun.py`` needs:
+the step function, abstract kwargs (no allocation anywhere), and
+in/out shardings -- for train, prefill and decode kinds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import SHAPES, get_config, shape_applicable, shape_config
+from ..distributed.sharding import (
+    act_rules,
+    batch_shardings,
+    cache_shardings,
+    state_shardings,
+)
+from ..models.layers import abstract_params, mesh_context
+from ..optim.adamw import AdamWConfig, init_opt_state
+from ..train.train_step import TrainHParams, make_train_step
+from ..zoo import get_api
+
+__all__ = ["Cell", "make_cell", "batch_specs"]
+
+DTYPE = jnp.bfloat16
+
+
+def batch_specs(cfg, shape) -> dict[str, SDS]:
+    """Abstract model inputs for one (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    out: dict[str, SDS] = {}
+    if shape.kind == "decode":
+        out["tokens"] = SDS((B, 1), jnp.int32)
+        return out
+    s_text = S
+    if cfg.family == "vlm":
+        s_text = S - cfg.n_patches
+        out["patches"] = SDS((B, cfg.n_patches, cfg.vision_dim), DTYPE)
+    if cfg.family == "encdec":
+        out["frames"] = SDS((B, cfg.n_frames, cfg.d_model), DTYPE)
+    out["tokens"] = SDS((B, s_text), jnp.int32)
+    if shape.kind == "train":
+        out["targets"] = SDS((B, S), jnp.int32)
+        out["loss_mask"] = SDS((B, S), jnp.float32)
+    return out
+
+
+def default_microbatches(cfg, shape, mesh, policy: str = "baseline") -> int:
+    """Pick microbatch count so the per-device microbatch is a few
+    sequences (1 for the >=8k-wide models) -- the activation-memory knob."""
+    dp = mesh.shape["data"] * (mesh.shape["pod"] if "pod" in mesh.axis_names else 1)
+    if policy == "dp2d":
+        dp *= mesh.shape["model"]
+    b_loc = max(shape.global_batch // dp, 1)
+    target = 1 if cfg.d_model >= 8192 else 4
+    mb = max(b_loc // target, 1)
+    while shape.global_batch % mb:
+        mb -= 1
+    return max(mb, 1)
+
+
+def abstract_cache(api, cfg, shape):
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    cfg: Any
+    fn: Callable              # jit-able step function
+    kwargs: dict              # abstract inputs, in fn's argument order
+    in_shardings: Any
+    out_shardings: Any
+    donate: tuple = ()
+    skip_reason: str = ""
+
+    @property
+    def skipped(self) -> bool:
+        return bool(self.skip_reason)
+
+
+def make_cell(arch: str, shape_name: str, mesh, hp: TrainHParams | None = None,
+              cfg_override=None, policy: str = "baseline") -> Cell:
+    shape = SHAPES[shape_name]
+    cfg0 = cfg_override if cfg_override is not None else get_config(arch)
+    ok, why = shape_applicable(cfg0, shape)
+    if not ok:
+        return Cell(arch, shape_name, cfg0, None, {}, None, None, skip_reason=why)
+    cfg = shape_config(cfg0, shape)
+    api = get_api(cfg)
+    specs = api.param_specs(cfg)
+    params_abs = abstract_params(specs)
+    p_shard = state_shardings(specs, mesh, policy=policy)
+    rules = act_rules(mesh, policy=policy)
+    b_abs = batch_specs(cfg, shape)
+    b_shard = batch_shardings(b_abs, mesh, policy=policy)
+    mdtype = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+    if shape.kind == "train":
+        hp = hp or TrainHParams(microbatches=default_microbatches(cfg, shape, mesh, policy))
+        step = make_train_step(api, cfg, hp, moment_dtype=mdtype)
+
+        def fn(state, batch):
+            with mesh_context(mesh, rules):
+                return step(state, batch)
+
+        opt_abs = jax.eval_shape(
+            lambda p: init_opt_state(p, AdamWConfig(moment_dtype=mdtype)), params_abs
+        )
+        opt_shard = {
+            "m": p_shard,
+            "v": p_shard,
+            "count": NamedSharding(mesh, P()),
+        }
+        state_abs = {"params": params_abs, "opt": opt_abs}
+        state_shard = {"params": p_shard, "opt": opt_shard}
+        return Cell(
+            arch, shape_name, cfg, fn,
+            {"state": state_abs, "batch": b_abs},
+            (state_shard, b_shard),
+            (state_shard, None),
+            donate=(0,),
+        )
+
+    if shape.kind == "prefill":
+        # NB: full-sequence logits are never materialized: the lm head is
+        # applied to the final position only (last_only=True).
+        def fn_last(params, batch):
+            with mesh_context(mesh, rules):
+                from ..models import (hybrid, moe, rwkv6, transformer, vlm,
+                                      whisper)
+                mod = {"dense": transformer, "moe": moe, "vlm": vlm,
+                       "hybrid": hybrid, "ssm": rwkv6, "encdec": whisper}[cfg.family]
+                kw = {}
+                if cfg.family == "vlm":
+                    kw["patches"] = batch.get("patches")
+                    out = mod.forward(params, batch["tokens"], cfg, remat=False,
+                                      last_only=True, **kw)
+                elif cfg.family == "encdec":
+                    out = mod.forward(params, batch["tokens"], cfg,
+                                      frames=batch["frames"], remat=False,
+                                      last_only=True)
+                else:
+                    out = mod.forward(params, batch["tokens"], cfg, remat=False,
+                                      last_only=True)
+                if isinstance(out, tuple):
+                    out = out[0]
+                return out
+
+        return Cell(
+            arch, shape_name, cfg, fn_last,
+            {"params": params_abs, "batch": b_abs},
+            (p_shard, b_shard),
+            None,
+        )
+
+    # decode
+    cache_abs = abstract_cache(api, cfg, shape)
+    c_shard = cache_shardings(cache_abs, mesh, batch_dim=1)
+
+    def fn(params, cache, tokens):
+        with mesh_context(mesh, rules):
+            return api.decode(params, cache, tokens, cfg)
+
+    tok_shard = batch_shardings({"t": b_abs["tokens"]}, mesh)["t"]
+    return Cell(
+        arch, shape_name, cfg, fn,
+        {"params": params_abs, "cache": cache_abs, "tokens": b_abs["tokens"]},
+        (p_shard, c_shard, tok_shard),
+        (None, c_shard),
+        donate=(1,),
+    )

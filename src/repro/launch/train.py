@@ -1,0 +1,46 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs a reduced (smoke) or full config on whatever devices exist; the
+production meshes are exercised by dryrun.py (this container has 1 CPU
+device -- real runs pass --mesh to map onto the pod slice).
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs import get_config, list_archs, smoke_config
+from ..train.train_step import TrainHParams
+from ..train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    hp = TrainHParams(peak_lr=args.lr, warmup=max(args.steps // 10, 1),
+                      total_steps=args.steps)
+    tr = Trainer(cfg, hp, ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every)
+    tr.hp_global_batch = args.batch
+    tr.hp_seq_len = args.seq
+    state, log = tr.fit(args.steps)
+    for i, m in enumerate(log):
+        if i % max(len(log) // 10, 1) == 0 or i == len(log) - 1:
+            print(f"step {i:5d} loss={float(m.get('loss', 0)):.4f} "
+                  f"gnorm={float(m.get('grad_norm', 0)):.3f} "
+                  f"wall={m.get('wall', 0):.2f}s")
+
+
+if __name__ == "__main__":
+    main()

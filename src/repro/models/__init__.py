@@ -1,0 +1,3 @@
+"""Pure-JAX model zoo: dense GQA transformer, MoE, Mamba-2, RWKV-6,
+Zamba2-style hybrid, Whisper-style enc-dec, LLaVA-style VLM."""
+from . import hybrid, layers, mamba2, moe, rwkv6, transformer, vlm, whisper  # noqa: F401

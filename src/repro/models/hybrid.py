@@ -1,0 +1,147 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + a *shared* attention block.
+
+The layer pattern is ``attn_every``-periodic: every 6th layer position runs
+the single shared attention+MLP block (one parameter set reused at every
+site, as in Zamba/Zamba2); all other positions are Mamba-2 blocks. With
+n_layers=81 and attn_every=6 that is 13 shared-attention applications and
+68 Mamba layers.
+
+Long-context (500k) decode works because the SSM state is O(1) and the
+shared attention block switches to a sliding-window ring-buffer KV cache
+when ``cfg.sliding_window`` is set (the long_500k serving config sets 4096;
+see DESIGN.md SS5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import mamba2
+from . import transformer as tf
+from .layers import DTYPE, ParamSpec, shard
+
+__all__ = ["param_specs", "forward", "decode_step", "init_cache", "plan_layers"]
+
+
+def plan_layers(cfg) -> tuple[int, int, list[str]]:
+    """Returns (n_mamba, n_attn, pattern list of 'm'/'a')."""
+    pattern = []
+    for i in range(cfg.n_layers):
+        pattern.append("a" if (i + 1) % cfg.attn_every == 0 else "m")
+    return pattern.count("m"), pattern.count("a"), pattern
+
+
+def _shared_attn_specs(cfg) -> dict:
+    """One dense transformer layer's worth of params (unstacked: L dim = 1
+    folded away) -- shared across all attention sites."""
+    import dataclasses
+
+    one = dataclasses.replace(cfg, n_layers=1)
+    sp = tf._layer_specs(one)
+
+    def unstack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape[1:], s.axes[1:], s.dtype, s.init)
+
+    return jax.tree.map(unstack, sp, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_specs(cfg) -> dict:
+    n_mamba, n_attn, _ = plan_layers(cfg)
+    d = cfg.d_model
+    return {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), init="embed"),
+        "mamba": mamba2.block_specs(cfg, n_mamba),
+        "shared_attn": _shared_attn_specs(cfg),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "lm_head": ParamSpec((d, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def _segments(cfg) -> list[tuple[int, int, bool]]:
+    """[(mamba_start, mamba_end, attn_after)] covering the layer pattern."""
+    _, _, pattern = plan_layers(cfg)
+    segs = []
+    m = 0
+    run = 0
+    for p in pattern:
+        if p == "m":
+            run += 1
+        else:
+            segs.append((m, m + run, True))
+            m += run
+            run = 0
+    if run:
+        segs.append((m, m + run, False))
+    return segs
+
+
+def forward(params, tokens, cfg, prefix_embeds=None, remat: bool = True,
+            last_only: bool = False):
+    x = params["embed"].astype(DTYPE)[tokens]
+    B, S = x.shape[0], x.shape[1]
+    x = shard(x, "batch", "seq_res", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def mamba_body(x, lw):
+        y, _ = mamba2.block_forward(x, lw, cfg)
+        return y, None
+
+    attn_body = lambda x: tf._layer_body(x, params["shared_attn"], cfg, positions)
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+        attn_body = jax.checkpoint(attn_body, prevent_cse=False)
+
+    for start, end, attn_after in _segments(cfg):
+        seg = jax.tree.map(lambda a: a[start:end], params["mamba"])
+        x, _ = jax.lax.scan(mamba_body, x, seg,
+                            unroll=(end - start) if cfg.unroll_layers else 1)
+        if attn_after:
+            x = attn_body(x)
+
+    if last_only:
+        x = x[:, -1:]
+    x = tf.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    n_mamba, n_attn, _ = plan_layers(cfg)
+    W = tf.cache_window(cfg, max_len)
+    return {
+        "ssm": mamba2.init_state(cfg, batch, n_mamba),
+        "k": jnp.zeros((n_attn, batch, W, cfg.n_kv_heads, cfg.head_dim), DTYPE),
+        "v": jnp.zeros((n_attn, batch, W, cfg.n_kv_heads, cfg.head_dim), DTYPE),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params, cache, tokens, cfg):
+    x = params["embed"].astype(DTYPE)[tokens]
+    pos = cache["pos"]
+    ssm, conv = cache["ssm"]["ssm"], cache["ssm"]["conv"]
+    new_ssm, new_conv = [], []
+    k_caches, v_caches = [], []
+    ai = 0
+    for start, end, attn_after in _segments(cfg):
+        for li in range(start, end):
+            lw = jax.tree.map(lambda a: a[li], params["mamba"])
+            x, (s_new, c_new) = mamba2.block_decode(x, lw, cfg, ssm[li], conv[li])
+            new_ssm.append(s_new)
+            new_conv.append(c_new)
+        if attn_after:
+            x, kc, vc = tf._decode_layer(
+                x, params["shared_attn"], cache["k"][ai], cache["v"][ai], pos, cfg
+            )
+            k_caches.append(kc)
+            v_caches.append(vc)
+            ai += 1
+    x = tf.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    new_cache = {
+        "ssm": {"ssm": jnp.stack(new_ssm), "conv": jnp.stack(new_conv)},
+        "k": jnp.stack(k_caches),
+        "v": jnp.stack(v_caches),
+        "pos": pos + 1,
+    }
+    return shard(logits, "batch", "seq", "vocab"), new_cache

@@ -1,0 +1,400 @@
+"""Shared pure-JAX building blocks for the model zoo.
+
+Conventions
+-----------
+* Parameters are nested dicts of ``jnp.ndarray``. Each model exposes
+  ``param_specs(cfg)`` returning an identically-nested dict of
+  :class:`ParamSpec`; ``init_params`` / ``abstract_params`` materialize it.
+* Every tensor dimension carries a *logical axis name*; the distributed
+  layer (``repro.distributed.sharding``) maps logical names to mesh axes.
+  ``shard(x, *names)`` inserts a ``with_sharding_constraint`` when a mesh
+  context is active and is the identity otherwise, so the same model code
+  runs on one CPU device and on a 512-chip mesh.
+* Layer stacks are scanned (``jax.lax.scan``) over a leading 'layers' axis
+  to keep HLO compact at 100+ layers, with ``jax.checkpoint`` (remat)
+  around the per-layer body for training.
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ParamSpec",
+    "init_params",
+    "abstract_params",
+    "param_shardings",
+    "mesh_context",
+    "shard",
+    "rms_norm",
+    "layer_norm",
+    "rope",
+    "attention",
+    "decode_attention",
+    "mlp",
+    "DTYPE",
+]
+
+DTYPE = jnp.bfloat16
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names per dim
+    dtype: Any = DTYPE
+    init: str = "fan_in"                  # fan_in | zeros | ones | embed
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(spec: ParamSpec, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        # 1/sqrt(d) keeps tied-head logits O(1) at init (CE ~ ln V)
+        scale = 1.0 / math.sqrt(max(spec.shape[-1], 1))
+    else:  # fan_in: scale by the penultimate (input) dimension
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def init_params(specs, key) -> dict:
+    """Materialize a ParamSpec tree into real arrays."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs) -> dict:
+    """ShapeDtypeStruct tree for lowering without allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mesh context: logical-axis -> PartitionSpec resolution
+# ---------------------------------------------------------------------------
+
+_MESH_CTX: list[tuple[Any, dict[str, Any]]] = []
+
+
+@contextmanager
+def mesh_context(mesh, rules: dict[str, Any]):
+    """Activate logical->mesh axis rules for ``shard`` / ``param_shardings``.
+
+    ``rules`` maps a logical axis name to a mesh axis name, a tuple of mesh
+    axis names, or None (replicated).
+    """
+    _MESH_CTX.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _MESH_CTX.pop()
+
+
+def logical_to_pspec(axes: tuple[str | None, ...], rules: dict[str, Any]) -> P:
+    return P(*(rules.get(a) if a is not None else None for a in axes))
+
+
+def shard(x: jnp.ndarray, *axes: str | None) -> jnp.ndarray:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o context)."""
+    if not _MESH_CTX:
+        return x
+    mesh, rules = _MESH_CTX[-1]
+    spec = logical_to_pspec(axes, rules)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec)
+    )
+
+
+def param_shardings(specs, mesh, rules: dict[str, Any]):
+    """NamedSharding tree for a ParamSpec tree under the given rules."""
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, logical_to_pspec(s.axes, rules)),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(
+    x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4) -> jnp.ndarray:
+    """Apply RoPE. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32) / (head_dim // 2))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    angles = angles[..., :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (training/prefill: blockwise-causal; decode: cached)
+# ---------------------------------------------------------------------------
+
+def attention(
+    q: jnp.ndarray,              # (B, S, Hq, D)
+    k: jnp.ndarray,              # (B, S, Hkv, D)
+    v: jnp.ndarray,              # (B, S, Hkv, D)
+    *,
+    causal: bool = True,
+    sliding_window: int | None = None,
+    block_kv: int = 1024,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Blockwise (flash-style) grouped-query attention with a custom VJP.
+
+    KV is processed in chunks of ``block_kv`` with an online softmax so the
+    S x S score matrix is never materialized, and the backward pass is the
+    FlashAttention recompute-per-block algorithm (hand-written VJP): only
+    (out, lse) are saved, so differentiating through the block loop does
+    NOT store per-block carries -- this is what keeps the train cells in
+    HBM. Query heads stay grouped (B, S, Hkv, rep, D) so repeated KV is
+    never formed. This is the pure-JAX twin of
+    ``repro.kernels.flash_attention``; ``unroll`` unrolls the block loops
+    (used by the dry-run's metric lowering so cost_analysis sees every
+    block).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    if S <= block_kv:  # small enough: single dense block
+        scale = 1.0 / math.sqrt(D)
+        qg = q.reshape(B, S, Hkv, rep, D).astype(jnp.float32) * scale
+        return _attn_dense(qg, k, v, causal, sliding_window).astype(q.dtype)
+    win = 0 if sliding_window is None else int(sliding_window)
+    out = _flash(q, k, v, bool(causal), win, int(block_kv), int(unroll))
+    return out
+
+
+def _flash_mask(q_pos, kv_pos, causal: bool, win: int, S: int):
+    mask = (kv_pos < S)[None, :]
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if win:
+        mask &= q_pos[:, None] - kv_pos[None, :] < win
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, causal, win, block_kv, unroll):
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, S, Hkv, rep, D).astype(jnp.float32) * scale
+    nb = (S + block_kv - 1) // block_kv
+    pad = nb * block_kv - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(S)
+
+    def step(carry, inp):
+        acc, m, l = carry
+        blk_idx, kb_i, vb_i = inp
+        kv_pos = blk_idx * block_kv + jnp.arange(block_kv)
+        s_ij = jnp.einsum("bqhrd,bkhd->bhrqk", qg, kb_i.astype(jnp.float32))
+        mask = _flash_mask(q_pos, kv_pos, causal, win, S)
+        s_ij = jnp.where(mask[None, None, None], s_ij, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.where(
+            jnp.isinf(s_ij), 0.0, jnp.exp(s_ij - m_safe[..., None])
+        )
+        corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhrqk,bkhd->bhrqd", p, vb_i.astype(jnp.float32)
+        )
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Hkv, rep, S, D), jnp.float32)
+    m0 = jnp.full((B, Hkv, rep, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, S), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (jnp.arange(nb), kb, vb),
+        unroll=min(nb, int(unroll)) if unroll else 1,
+    )
+    l_safe = jnp.maximum(l, 1e-37)
+    out = acc / l_safe[..., None]                      # (B,Hkv,rep,S,D)
+    lse = m + jnp.log(l_safe)                          # (B,Hkv,rep,S)
+    out_std = out.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, D).astype(q.dtype)
+    return out_std, (out, lse)
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, win, block_kv, unroll):
+    out, _ = _flash_fwd_impl(q, k, v, causal, win, block_kv, unroll)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, win, block_kv, unroll):
+    out_std, (_, lse) = _flash_fwd_impl(q, k, v, causal, win, block_kv, unroll)
+    # residuals are bf16 out + fp32 lse only (FlashAttention-2 discipline)
+    return out_std, (q, k, v, out_std, lse)
+
+
+def _flash_bwd(causal, win, block_kv, unroll, res, g):
+    q, k, v, out_std, lse = res                # out_std: (B,S,Hq,D) bf16
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, S, Hkv, rep, D).astype(jnp.float32)
+    do = g.reshape(B, S, Hkv, rep, D).astype(jnp.float32).transpose(0, 2, 3, 1, 4)
+    out = out_std.reshape(B, S, Hkv, rep, D).astype(jnp.float32).transpose(
+        0, 2, 3, 1, 4
+    )
+    delta = jnp.sum(do * out, axis=-1)         # (B,Hkv,rep,S)
+    nb = (S + block_kv - 1) // block_kv
+    pad = nb * block_kv - S
+    kp, vp = k, v
+    if pad:
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = kp.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nb, block_kv, Hkv, D).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(S)
+
+    def step(dq_acc, inp):
+        blk_idx, kb_i, vb_i = inp
+        kv_pos = blk_idx * block_kv + jnp.arange(block_kv)
+        kf = kb_i.astype(jnp.float32)
+        vf = vb_i.astype(jnp.float32)
+        s_ij = jnp.einsum("bqhrd,bkhd->bhrqk", qg * scale, kf)
+        mask = _flash_mask(q_pos, kv_pos, causal, win, S)
+        p = jnp.where(
+            mask[None, None, None], jnp.exp(s_ij - lse[..., None]), 0.0
+        )                                       # (B,Hkv,rep,S,K)
+        dv_i = jnp.einsum("bhrqk,bhrqd->bkhd", p, do)
+        dp = jnp.einsum("bhrqd,bkhd->bhrqk", do, vf)
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhrqk,bkhd->bqhrd", ds, kf)
+        dk_i = jnp.einsum("bhrqk,bqhrd->bkhd", ds, qg)
+        return dq_acc, (dk_i, dv_i)
+
+    dq0 = jnp.zeros((B, S, Hkv, rep, D), jnp.float32)
+    dq, (dkb, dvb) = jax.lax.scan(
+        step, dq0, (jnp.arange(nb), kb, vb),
+        unroll=min(nb, int(unroll)) if unroll else 1,
+    )
+    dq = dq.reshape(B, S, Hq, D).astype(q.dtype)
+    dk = dkb.transpose(1, 0, 2, 3, 4).reshape(B, nb * block_kv, Hkv, D)[:, :S]
+    dv = dvb.transpose(1, 0, 2, 3, 4).reshape(B, nb * block_kv, Hkv, D)[:, :S]
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _attn_dense(qg, k, v, causal, sliding_window):
+    """qg: (B,S,Hkv,rep,D) fp32 pre-scaled; k, v: (B,S,Hkv,D)."""
+    B, S, Hkv, rep, D = qg.shape
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k.astype(jnp.float32))
+    q_pos = jnp.arange(S)
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= q_pos[None, :]
+    if sliding_window is not None:
+        mask &= q_pos[:, None] - q_pos[None, :] < sliding_window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, Hkv * rep, D)
+
+
+def decode_attention(
+    q: jnp.ndarray,              # (B, 1, Hq, D)
+    k_cache: jnp.ndarray,        # (B, S_max, Hkv, D)
+    v_cache: jnp.ndarray,
+    cache_len,                   # scalar or (B,) valid lengths
+) -> jnp.ndarray:
+    """Single-token attention against a KV cache.
+
+    Works unchanged for sliding-window ring buffers: keys are stored
+    post-RoPE with absolute positions, so scores depend only on relative
+    position and the physical slot order inside the ring is irrelevant;
+    the window is enforced by the ring size and ``cache_len`` counts
+    valid (written) slots clamped to the ring capacity.
+    """
+    B, S_max, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    n_rep = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32) * scale          # (B, 1, Hq, D)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    if n_rep > 1:
+        qf = qf.reshape(B, 1, Hkv, n_rep, D)
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kf)   # (B,Hkv,rep,1,S)
+    else:
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)[:, :, None]
+    idx = jnp.arange(S_max)
+    valid = idx[None, :] < jnp.reshape(cache_len, (-1, 1))
+    s = jnp.where(valid[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)         # fully-masked rows
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p, vf)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp(x: jnp.ndarray, w: dict, kind: str = "swiglu") -> jnp.ndarray:
+    """SwiGLU (w: wi_gate, wi_up, wo) or GELU (w: wi, wo) feed-forward."""
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, w["wi_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, w["wi_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, w["wi"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, w["wo"])

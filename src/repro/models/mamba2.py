@@ -1,0 +1,192 @@
+"""Mamba-2 (SSD) block, pure JAX, chunk-parallel.
+
+Implements the state-space-duality formulation: within a chunk the output is
+a masked (decay-weighted) attention-like matmul; across chunks a low-rank
+state (H, Dh, N) is carried by a scan. All decay exponents are differences
+of a monotone cumulative log-decay, hence <= 0 -- numerically stable in
+fp32 without clamping. Decode is the O(1) recurrent update with a rolling
+depthwise-conv cache.
+
+Used standalone is not a full model; :mod:`repro.models.hybrid` (zamba2)
+composes these blocks with a shared attention block, and a pure-Mamba model
+could be built the same way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, ParamSpec, rms_norm, shard
+
+__all__ = [
+    "block_specs",
+    "block_forward",
+    "block_decode",
+    "init_state",
+    "dims",
+]
+
+CONV_K = 4
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    G = cfg.ssm_groups
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * G * N
+    in_dim = 2 * d_inner + 2 * G * N + H
+    return d_inner, H, G, N, conv_dim, in_dim
+
+
+def block_specs(cfg, n_layers: int) -> dict:
+    d = cfg.d_model
+    d_inner, H, G, N, conv_dim, in_dim = dims(cfg)
+    L = n_layers
+    return {
+        "norm": ParamSpec((L, d), ("layers", "embed"), init="ones"),
+        "in_proj": ParamSpec((L, d, in_dim), ("layers", "embed", "mlp")),
+        "conv_w": ParamSpec((L, CONV_K, conv_dim), ("layers", None, "mlp")),
+        "conv_b": ParamSpec((L, conv_dim), ("layers", "mlp"), init="zeros"),
+        "A_log": ParamSpec((L, H), ("layers", None), dtype=jnp.float32, init="zeros"),
+        "D": ParamSpec((L, H), ("layers", None), dtype=jnp.float32, init="ones"),
+        "dt_bias": ParamSpec((L, H), ("layers", None), dtype=jnp.float32, init="zeros"),
+        "out_norm": ParamSpec((L, d_inner), ("layers", "mlp"), init="ones"),
+        "out_proj": ParamSpec((L, d_inner, d), ("layers", "mlp", "embed")),
+    }
+
+
+def _split_proj(x, lw, cfg):
+    d_inner, H, G, N, conv_dim, _ = dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, lw["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim :]
+    return z, xBC, dt
+
+
+def _conv(xBC, lw, cache=None):
+    """Causal depthwise conv, kernel CONV_K. cache: (B, K-1, conv_dim)."""
+    if cache is None:
+        pad = jnp.zeros((xBC.shape[0], CONV_K - 1, xBC.shape[-1]), xBC.dtype)
+    else:
+        pad = cache.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    S = xBC.shape[1]
+    y = sum(
+        xp[:, j : j + S] * lw["conv_w"][j][None, None] for j in range(CONV_K)
+    ) + lw["conv_b"][None, None]
+    new_cache = xp[:, -(CONV_K - 1) :]
+    return jax.nn.silu(y.astype(jnp.float32)).astype(xBC.dtype), new_cache
+
+
+def _ssm_inputs(xBC, dt, lw, cfg):
+    d_inner, H, G, N, _, _ = dims(cfg)
+    B_, S = xBC.shape[0], xBC.shape[1]
+    xs = xBC[..., :d_inner].reshape(B_, S, H, cfg.ssm_head_dim)
+    Bm = xBC[..., d_inner : d_inner + G * N].reshape(B_, S, G, N)
+    Cm = xBC[..., d_inner + G * N :].reshape(B_, S, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lw["dt_bias"])          # (B,S,H)
+    la = -jnp.exp(lw["A_log"])[None, None] * dt                           # log a_t <= 0
+    xbar = xs.astype(jnp.float32) * dt[..., None]                         # dt-scaled input
+    return xs, xbar, Bh.astype(jnp.float32), Ch.astype(jnp.float32), la
+
+
+def ssd_chunked(xbar, Bh, Ch, la, chunk: int, state0=None, unroll: int = 0):
+    """Chunk-parallel SSD. All args fp32.
+
+    xbar: (B,S,H,Dh); Bh/Ch: (B,S,H,N); la: (B,S,H) log-decay.
+    Returns (y (B,S,H,Dh), final_state (B,H,Dh,N)).
+    """
+    B_, S, H, Dh = xbar.shape
+    N = Bh.shape[-1]
+    Q = min(chunk, S)
+    nc = (S + Q - 1) // Q
+    if nc * Q != S:  # pad with identity steps (la=0, xbar=0)
+        pad = nc * Q - S
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+
+    def csplit(t):
+        return t.reshape(B_, nc, Q, *t.shape[2:]).transpose(1, 0, *range(2, t.ndim + 1))
+
+    xc, Bc, Cc, lac = csplit(xbar), csplit(Bh), csplit(Ch), csplit(la)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    if state0 is None:
+        state0 = jnp.zeros((B_, H, Dh, N), jnp.float32)
+
+    def step(S_prev, inp):
+        xc_, Bc_, Cc_, lac_ = inp                                # (B,Q,...)
+        cum = jnp.cumsum(lac_, axis=1)                           # (B,Q,H)
+        # intra-chunk masked decay attention: D_ij = exp(cum_i - cum_j), i>=j
+        dmat = cum[:, :, None, :] - cum[:, None, :, :]           # (B,i,j,H)
+        dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+        scores = jnp.einsum("bihn,bjhn->bijh", Cc_, Bc_) * jnp.exp(dmat)
+        y = jnp.einsum("bijh,bjhd->bihd", scores, xc_)
+        # contribution of the carried state + state update
+        y = y + jnp.einsum("bihn,bhdn->bihd", Cc_ * jnp.exp(cum)[..., None], S_prev)
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)                # (B,Q,H)
+        S_new = S_prev * jnp.exp(cum[:, -1])[..., None, None] + jnp.einsum(
+            "bjhn,bjhd->bhdn", Bc_ * decay_end[..., None], xc_
+        )
+        return S_new, y
+
+    final, ys = jax.lax.scan(step, state0, (xc, Bc, Cc, lac),
+                             unroll=min(nc, int(unroll)) if unroll else 1)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, nc * Q, H, Dh)
+    return y[:, :S], final
+
+
+def block_forward(x, lw, cfg, state0=None, conv_cache=None):
+    """Full Mamba-2 block: norm -> proj -> conv -> SSD -> gate -> out.
+
+    x: (B,S,d). Returns (out (B,S,d), (final_state, conv_cache)).
+    """
+    d_inner, H, G, N, _, _ = dims(cfg)
+    h = rms_norm(x, lw["norm"])
+    z, xBC, dt = _split_proj(h, lw, cfg)
+    xBC, new_conv = _conv(xBC, lw, conv_cache)
+    xs, xbar, Bh, Ch, la = _ssm_inputs(xBC, dt, lw, cfg)
+    y, final = ssd_chunked(xbar, Bh, Ch, la, cfg.ssm_chunk, state0,
+                           unroll=cfg.unroll_inner)
+    y = y + lw["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], d_inner)
+    y = rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(DTYPE), lw["out_norm"]
+    )
+    out = jnp.einsum("bse,ed->bsd", y, lw["out_proj"])
+    return x + shard(out, "batch", "seq_res", "embed"), (final, new_conv)
+
+
+def init_state(cfg, batch: int, n_layers: int):
+    d_inner, H, G, N, conv_dim, _ = dims(cfg)
+    return {
+        "ssm": jnp.zeros((n_layers, batch, H, cfg.ssm_head_dim, N), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, CONV_K - 1, conv_dim), DTYPE),
+    }
+
+
+def block_decode(x, lw, cfg, state, conv_cache):
+    """One-token recurrent update. x: (B,1,d)."""
+    d_inner, H, G, N, _, _ = dims(cfg)
+    h = rms_norm(x, lw["norm"])
+    z, xBC, dt = _split_proj(h, lw, cfg)
+    xBC, new_conv = _conv(xBC, lw, conv_cache)
+    xs, xbar, Bh, Ch, la = _ssm_inputs(xBC, dt, lw, cfg)
+    a = jnp.exp(la[:, 0])                                   # (B,H)
+    new_state = state * a[..., None, None] + jnp.einsum(
+        "bhn,bhd->bhdn", Bh[:, 0], xbar[:, 0]
+    )
+    y = jnp.einsum("bhn,bhdn->bhd", Ch[:, 0], new_state)
+    y = y + lw["D"][None, :, None] * xs[:, 0].astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, d_inner)
+    y = rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(DTYPE), lw["out_norm"]
+    )
+    out = jnp.einsum("bse,ed->bsd", y, lw["out_proj"])
+    return x + out, (new_state, new_conv)

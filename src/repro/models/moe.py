@@ -1,0 +1,221 @@
+"""Mixture-of-Experts transformer (DeepSeekMoE / Qwen2-MoE style).
+
+Shared experts (always-on SwiGLU) + fine-grained routed experts with top-k
+softmax gating and capacity-based token dropping (GShard discipline). The
+dispatch is sort-based -- expert id / rank-within-expert computed with a
+stable argsort, tokens scattered into an (E, C, d) buffer -- so it lowers
+to gather/scatter HLO that shards cleanly with experts on the 'model'
+(expert-parallel) mesh axis; the O(T*E*C) one-hot einsum of the original
+GShard formulation is never materialized.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, ParamSpec, mlp, rms_norm, shard
+from . import transformer as tf
+
+__all__ = ["param_specs", "forward", "decode_step", "init_cache", "moe_mlp"]
+
+
+def padded_experts(cfg) -> int:
+    """Routed experts padded to a multiple of 16 so the expert dimension
+    shards over the 16-wide model axis (qwen2-moe's 60 -> 64; the 4 dead
+    experts are masked out of routing and receive no tokens)."""
+    return -(-cfg.n_experts // 16) * 16
+
+
+def _moe_layer_specs(cfg) -> dict:
+    sp = tf._layer_specs(cfg)
+    L, d, fe = cfg.n_layers, cfg.d_model, cfg.d_expert
+    E = padded_experts(cfg)
+    fs = cfg.n_shared * cfg.d_expert
+    sp["router"] = ParamSpec((L, d, E), ("layers", "embed", None), dtype=jnp.float32)
+    sp["experts"] = {
+        # the hidden dim of an expert is NOT tensor-parallel -- experts are
+        # already sharded over the model axis (EP); 'expert_mlp' maps to None
+        "wi_gate": ParamSpec((L, E, d, fe), ("layers", "expert", "embed", "expert_mlp")),
+        "wi_up": ParamSpec((L, E, d, fe), ("layers", "expert", "embed", "expert_mlp")),
+        "wo": ParamSpec((L, E, fe, d), ("layers", "expert", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared:
+        sp["shared"] = {
+            "wi_gate": ParamSpec((L, d, fs), ("layers", "embed", "mlp")),
+            "wi_up": ParamSpec((L, d, fs), ("layers", "embed", "mlp")),
+            "wo": ParamSpec((L, fs, d), ("layers", "mlp", "embed")),
+        }
+    del sp["mlp"]
+    return sp
+
+
+def param_specs(cfg) -> dict:
+    sp = tf.param_specs(cfg)
+    sp["layers"] = _moe_layer_specs(cfg)
+    return sp
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    c = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(min(n_tokens, max(c, 8)), 1)
+
+
+def n_groups(T: int, cfg) -> int:
+    """Largest group count <= moe_groups dividing T. Groups align with the
+    data-parallel shards so the rank-within-expert sort never crosses a
+    device boundary (a global argsort over 10^6 tokens is a partitioning
+    disaster at 256+ chips -- a 40-minute XLA compile in practice)."""
+    g = min(cfg.moe_groups, T)
+    while T % g:
+        g -= 1
+    return max(g, 1)
+
+
+def moe_mlp(x: jnp.ndarray, lw: dict, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Routed + shared expert FFN. x: (B, S, d) -> (out, aux_loss).
+
+    GShard-style grouped dispatch: tokens are split into G groups (aligned
+    with the data-parallel shards); each group computes its own top-k,
+    rank-within-expert (shard-local stable sort) and capacity; the
+    (G, E, C, d) dispatch buffer then crosses from group-major to
+    expert-major layout in one SPMD all-to-all.
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = padded_experts(cfg), cfg.top_k
+    G = n_groups(T, cfg)
+    Tg = T // G
+    C = capacity(Tg, cfg)
+    xt = shard(x.reshape(G, Tg, d), "expert_group", None, "embed")
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), lw["router"])
+    if E != cfg.n_experts:  # mask padded (dead) experts out of routing
+        dead = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(dead[None, None], -jnp.inf, logits)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G, Tg, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (G, Tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style load-balance auxiliary loss (global average).
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    ) / k
+    aux = E * jnp.sum(me * ce)
+
+    # Per-group sort-based rank-within-expert (shard-local).
+    flat_e = expert_idx.reshape(G, Tg * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    first = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)
+    rank_sorted = jnp.arange(Tg * k)[None] - jnp.take_along_axis(
+        first, sorted_e, axis=-1
+    )
+    rank = jnp.zeros((G, Tg * k), jnp.int32).at[
+        jnp.arange(G)[:, None], order
+    ].set(rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    dest = flat_e * C + jnp.minimum(rank, C - 1)               # (G, Tg*k)
+    tok = jnp.arange(Tg * k) // k
+
+    vals = jnp.where(keep[..., None], xt[:, tok], 0).astype(DTYPE)
+    buf = jnp.zeros((G, E * C, d), DTYPE).at[
+        jnp.arange(G)[:, None], dest
+    ].add(vals)
+    # group-major -> expert-major: the EP all-to-all happens here
+    buf = shard(buf.reshape(G, E, C, d), "expert_group", "expert", None, "embed")
+
+    gt = jnp.einsum("gecd,edf->gecf", buf, lw["experts"]["wi_gate"])
+    up = jnp.einsum("gecd,edf->gecf", buf, lw["experts"]["wi_up"])
+    h = jax.nn.silu(gt.astype(jnp.float32)).astype(DTYPE) * up
+    h = shard(h, "expert_group", "expert", None, "expert_mlp")
+    y = jnp.einsum("gecf,efd->gecd", h, lw["experts"]["wo"])
+    y = y.reshape(G, E * C, d)
+
+    out_tok = y[jnp.arange(G)[:, None], dest] * (
+        keep[..., None] * gate_vals.reshape(G, Tg * k, 1)
+    ).astype(DTYPE)
+    routed = out_tok.reshape(G, Tg, k, d).sum(axis=2).reshape(T, d)
+
+    out = routed
+    if cfg.n_shared:
+        out = out + mlp(x.reshape(1, T, d), lw["shared"], "swiglu")[0]
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _layer_body(x, lw, cfg, positions):
+    h = tf._norm(x, None, cfg, "attn_norm", "attn_norm_b", lw)
+    q, kk, v = tf._qkv(h, lw, cfg, positions)
+    o = tf.attention(
+        q, kk, v, causal=cfg.causal, sliding_window=cfg.sliding_window,
+        block_kv=cfg.attn_block_kv, unroll=cfg.unroll_inner,
+    )
+    o = jnp.einsum("bse,ed->bsd", o.reshape(*o.shape[:2], -1), lw["wo"])
+    x = x + o
+    h = tf._norm(x, None, cfg, "mlp_norm", "mlp_norm_b", lw)
+    y, aux = moe_mlp(h, lw, cfg)
+    return shard(x + y, "batch", "seq_res", "embed"), aux
+
+
+def forward(params, tokens, cfg, prefix_embeds=None, remat: bool = True,
+            last_only: bool = False):
+    """Returns (logits, aux_loss_mean)."""
+    x = params["embed"].astype(DTYPE)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(DTYPE), x], axis=1)
+    B, S, _ = x.shape
+    x = shard(x, "batch", "seq_res", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lw):
+        return _layer_body(x, lw, cfg, positions)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, aux = jax.lax.scan(body, x, params["layers"],
+                          unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    if last_only:
+        x = x[:, -1:]
+    x = tf._norm(x, params, cfg, "final_norm", "final_norm_b")
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, "batch", "seq", "vocab"), jnp.mean(aux)
+
+
+init_cache = tf.init_cache
+
+
+def decode_step(params, cache, tokens, cfg):
+    x = params["embed"].astype(DTYPE)[tokens]
+    x = shard(x, "batch", "seq_res", "embed")
+    pos = cache["pos"]
+    B = x.shape[0]
+
+    def body(x, xs):
+        lw, kc, vc = xs
+        h = tf._norm(x, None, cfg, "attn_norm", "attn_norm_b", lw)
+        positions = jnp.broadcast_to(pos[:, None], (B, 1))
+        q, kk, v = tf._qkv(h, lw, cfg, positions)
+        W = kc.shape[1]
+        slot = (pos[0] % W).astype(jnp.int32)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, kk, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        cache_len = jnp.minimum(pos[0] + 1, W)
+        o = tf.decode_attention(q, kc, vc, cache_len)
+        o = jnp.einsum("bse,ed->bsd", o.reshape(B, 1, -1), lw["wo"])
+        x = x + o
+        h = tf._norm(x, None, cfg, "mlp_norm", "mlp_norm_b", lw)
+        y, _ = moe_mlp(h, lw, cfg)
+        return x + y, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=cfg.n_layers if cfg.unroll_layers else 1,
+    )
+    x = tf._norm(x, params, cfg, "final_norm", "final_norm_b")
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, "batch", "seq", "vocab"), {"k": k_new, "v": v_new, "pos": pos + 1}

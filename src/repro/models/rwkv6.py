@@ -1,0 +1,270 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent per-channel decay).
+
+Time-mix: WKV linear recurrence with matrix state S (head: key-dim x
+value-dim) and data-dependent diagonal decay w_t produced by a token-shift
+LoRA; bonus term u for the current token. Channel-mix: token-shifted
+squared-ReLU FFN with sigmoid receptance.
+
+The training path is chunk-parallel: within a chunk of Q tokens the pairwise
+decay tensor exp(ce_i - c_j) (i > j) is formed explicitly per (Q, Q, Dh) --
+every exponent is a difference of a monotone cumulative log-decay, hence
+<= 0, so the computation is exactly the recurrence, fp32-stable, with no
+clamping. Decode is the O(1) per-token state update. There is no KV cache
+anywhere -- this is the arch for which the paper's paged-KV technique is
+inapplicable (see DESIGN.md SS5); state offload reuses the same prefetch
+pipeline instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, ParamSpec, layer_norm, shard
+
+__all__ = ["param_specs", "forward", "decode_step", "init_state"]
+
+TM_LORA = 32     # token-shift mixing LoRA rank
+TD_LORA = 64     # decay LoRA rank
+
+
+def _layer_specs(cfg) -> dict:
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    H, Dh = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "ln1": ParamSpec((L, d), ("layers", "embed"), init="ones"),
+        "ln1_b": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+        "ln2": ParamSpec((L, d), ("layers", "embed"), init="ones"),
+        "ln2_b": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+        # time-mix
+        "maa_x": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+        "maa_wkvrg": ParamSpec((L, 5, d), ("layers", None, "embed"), init="zeros"),
+        "maa_w1": ParamSpec((L, d, 5 * TM_LORA), ("layers", "embed", None)),
+        "maa_w2": ParamSpec((L, 5, TM_LORA, d), ("layers", None, None, "embed")),
+        "decay_base": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+        "decay_w1": ParamSpec((L, d, TD_LORA), ("layers", "embed", None)),
+        "decay_w2": ParamSpec((L, TD_LORA, d), ("layers", None, "embed")),
+        "bonus_u": ParamSpec((L, H, Dh), ("layers", None, None), init="zeros"),  # H=40 not 16-divisible: replicate
+        "wr": ParamSpec((L, d, d), ("layers", "embed", "heads_flat")),
+        "wk": ParamSpec((L, d, d), ("layers", "embed", "heads_flat")),
+        "wv": ParamSpec((L, d, d), ("layers", "embed", "heads_flat")),
+        "wg": ParamSpec((L, d, d), ("layers", "embed", "heads_flat")),
+        "wo": ParamSpec((L, d, d), ("layers", "heads_flat", "embed")),
+        "gn": ParamSpec((L, d), ("layers", "embed"), init="ones"),
+        "gn_b": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+        # channel-mix
+        "cm_maa_k": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+        "cm_maa_r": ParamSpec((L, d), ("layers", "embed"), init="zeros"),
+        "cm_wk": ParamSpec((L, d, ff), ("layers", "embed", "mlp")),
+        "cm_wv": ParamSpec((L, ff, d), ("layers", "mlp", "embed")),
+        "cm_wr": ParamSpec((L, d, d), ("layers", "embed", "embed2")),
+    }
+
+
+def param_specs(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), init="embed"),
+        "ln_in": ParamSpec((d,), ("embed",), init="ones"),
+        "ln_in_b": ParamSpec((d,), ("embed",), init="zeros"),
+        "layers": _layer_specs(cfg),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "final_norm_b": ParamSpec((d,), ("embed",), init="zeros"),
+        "lm_head": ParamSpec((d, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def _time_mix_inputs(x, x_prev, lw):
+    """Token-shift DDLerp -> (xw, xk, xv, xr, xg) and decay w (log-space)."""
+    sx = x_prev - x
+    xxx = x + sx * lw["maa_x"]
+    B, S, d = x.shape
+    lo = jnp.tanh(jnp.einsum("bsd,dr->bsr", xxx, lw["maa_w1"]))
+    lo = lo.reshape(B, S, 5, TM_LORA)
+    mix = jnp.einsum("bsfr,frd->bsfd", lo, lw["maa_w2"]) + lw["maa_wkvrg"][None, None]
+    xs = x[:, :, None] + sx[:, :, None] * mix              # (B,S,5,d)
+    xw, xk, xv, xr, xg = [xs[:, :, i] for i in range(5)]
+    dec = lw["decay_base"] + jnp.einsum(
+        "bsr,rd->bsd", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, lw["decay_w1"])),
+        lw["decay_w2"],
+    )
+    log_w = -jnp.exp(dec.astype(jnp.float32))              # log w_t <= 0
+    return xk, xv, xr, xg, log_w
+
+
+def wkv_chunked(r, k, v, log_w, u, chunk: int, state0=None, unroll: int = 0):
+    """Chunk-parallel WKV. r,k,v: (B,S,H,Dh); log_w: (B,S,H,Dh) <= 0.
+
+    out_t = r_t . (S_{t-1} + (u * k_t) v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (out (B,S,H,Dh_v), final_state (B,H,Dh,Dh)).
+    """
+    B, S, H, Dh = r.shape
+    Q = min(chunk, S)
+    nc = (S + Q - 1) // Q
+    if nc * Q != S:
+        pad = nc * Q - S
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def csplit(t):
+        return t.reshape(B, nc, Q, H, Dh).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, lwc = csplit(r), csplit(k), csplit(v), csplit(log_w)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+
+    def step(S_prev, inp):
+        rc_, kc_, vc_, lwc_ = inp                          # (B,Q,H,Dh)
+        c = jnp.cumsum(lwc_, axis=1)                       # inclusive
+        ce = c - lwc_                                      # exclusive
+        # intra-chunk: s_ij = sum_d r_i k_j exp(ce_i - c_j), strictly i > j;
+        # ce_i - c_j <= 0 for i > j, so every exponent is stable.
+        dmat = ce[:, :, None] - c[:, None, :]              # (B,i,j,H,Dh)
+        dexp = jnp.where(mask[None, :, :, None, None], jnp.exp(dmat), 0.0)
+        s = jnp.einsum("bihd,bjhd,bijhd->bijh", rc_, kc_, dexp)
+        y = jnp.einsum("bijh,bjhe->bihe", s, vc_)
+        diag = jnp.einsum("bihd,bihd->bih", rc_, kc_ * u[None, None])
+        y = y + diag[..., None] * vc_
+        # inter-chunk contribution + state carry
+        y = y + jnp.einsum("bihd,bhde->bihe", rc_ * jnp.exp(ce), S_prev)
+        total = jnp.exp(c[:, -1])                          # (B,H,Dh)
+        kdec = kc_ * jnp.exp(c[:, -1:] - c)
+        S_new = S_prev * total[..., None] + jnp.einsum("bjhd,bjhe->bhde", kdec, vc_)
+        return S_new, y
+
+    final, ys = jax.lax.scan(step, state0, (rc, kc, vc, lwc),
+                             unroll=min(nc, int(unroll)) if unroll else 1)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * Q, H, Dh)
+    return y[:, :S], final
+
+
+def _heads(t, H, Dh):
+    return t.reshape(*t.shape[:2], H, Dh).astype(jnp.float32)
+
+
+def _time_mix(x, x_prev, lw, cfg, state0=None, decode=False):
+    H, Dh = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    xk, xv, xr, xg, log_w = _time_mix_inputs(x, x_prev, lw)
+    r = _heads(jnp.einsum("bsd,de->bse", xr, lw["wr"]), H, Dh)
+    k = _heads(jnp.einsum("bsd,de->bse", xk, lw["wk"]), H, Dh)
+    v = _heads(jnp.einsum("bsd,de->bse", xv, lw["wv"]), H, Dh)
+    g = jnp.einsum("bsd,de->bse", xg, lw["wg"])
+    lwh = log_w.reshape(*log_w.shape[:2], H, Dh)
+    u = lw["bonus_u"].astype(jnp.float32)
+    if decode:
+        state = state0
+        out_t = jnp.einsum(
+            "bhd,bhde->bhe", r[:, 0], state + jnp.einsum(
+                "bhd,bhe->bhde", u[None] * k[:, 0], v[:, 0])
+        )
+        new_state = state * jnp.exp(lwh[:, 0])[..., None] + jnp.einsum(
+            "bhd,bhe->bhde", k[:, 0], v[:, 0]
+        )
+        y, final = out_t[:, None], new_state
+    else:
+        y, final = wkv_chunked(r, k, v, lwh, u, cfg.ssm_chunk, state0,
+                               unroll=cfg.unroll_inner)
+    B, S = x.shape[:2]
+    y = y.reshape(B, S, H * Dh).astype(DTYPE)
+    # per-head group norm == LayerNorm over each head's channels
+    yh = y.reshape(B, S, H, Dh).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S, H * Dh).astype(DTYPE) * lw["gn"] + lw["gn_b"]
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(DTYPE)
+    return jnp.einsum("bse,ed->bsd", y, lw["wo"]), final
+
+
+def _channel_mix(x, x_prev, lw):
+    sx = x_prev - x
+    xk = x + sx * lw["cm_maa_k"]
+    xr = x + sx * lw["cm_maa_r"]
+    kk = jnp.einsum("bsd,df->bsf", xk, lw["cm_wk"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(DTYPE)
+    kk = shard(kk, "batch", "seq", "mlp")
+    vv = jnp.einsum("bsf,fd->bsd", kk, lw["cm_wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, lw["cm_wr"]).astype(jnp.float32))
+    return rr.astype(DTYPE) * vv
+
+
+def _shift(x, last=None):
+    """x_prev: previous token's activations (zero or carried for decode)."""
+    if last is None:
+        return jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1) if x.shape[1] > 1 else last[:, None]
+
+
+def _layer(x, lw, cfg, st=None, decode=False):
+    """st: None (train) or dict(tm_state, tm_last, cm_last)."""
+    h = layer_norm(x, lw["ln1"], lw["ln1_b"])
+    h_prev = _shift(h, st["tm_last"] if decode else None)
+    tm, new_state = _time_mix(
+        h, h_prev, lw, cfg, st["tm_state"] if decode else None, decode
+    )
+    x = x + tm
+    h2 = layer_norm(x, lw["ln2"], lw["ln2_b"])
+    h2_prev = _shift(h2, st["cm_last"] if decode else None)
+    x = x + _channel_mix(h2, h2_prev, lw)
+    new_st = {
+        "tm_state": new_state,
+        "tm_last": h[:, -1],
+        "cm_last": h2[:, -1],
+    }
+    return shard(x, "batch", "seq_res", "embed"), new_st
+
+
+def forward(params, tokens, cfg, prefix_embeds=None, remat: bool = True,
+            last_only: bool = False):
+    x = params["embed"].astype(DTYPE)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(DTYPE), x], axis=1)
+    x = layer_norm(x, params["ln_in"], params["ln_in_b"])
+    x = shard(x, "batch", "seq_res", "embed")
+
+    def body(x, lw):
+        y, _ = _layer(x, lw, cfg)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                        unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    if last_only:
+        x = x[:, -1:]
+    x = layer_norm(x, params["final_norm"], params["final_norm_b"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def init_state(cfg, batch: int) -> dict:
+    H, Dh, d, L = cfg.n_rwkv_heads, cfg.rwkv_head_dim, cfg.d_model, cfg.n_layers
+    return {
+        "tm_state": jnp.zeros((L, batch, H, Dh, Dh), jnp.float32),
+        "tm_last": jnp.zeros((L, batch, d), DTYPE),
+        "cm_last": jnp.zeros((L, batch, d), DTYPE),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params, state, tokens, cfg):
+    x = params["embed"].astype(DTYPE)[tokens]
+    x = layer_norm(x, params["ln_in"], params["ln_in_b"])
+
+    def body(x, xs):
+        lw, tm_s, tm_l, cm_l = xs
+        y, st = _layer(x, lw, cfg, {"tm_state": tm_s, "tm_last": tm_l, "cm_last": cm_l},
+                       decode=True)
+        return y, (st["tm_state"], st["tm_last"], st["cm_last"])
+
+    x, (tm_s, tm_l, cm_l) = jax.lax.scan(
+        body, x, (params["layers"], state["tm_state"], state["tm_last"], state["cm_last"]),
+        unroll=cfg.n_layers if cfg.unroll_layers else 1,
+    )
+    x = layer_norm(x, params["final_norm"], params["final_norm_b"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    new_state = {"tm_state": tm_s, "tm_last": tm_l, "cm_last": cm_l,
+                 "pos": state["pos"] + 1}
+    return shard(logits, "batch", "seq", "vocab"), new_state

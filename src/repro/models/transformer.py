@@ -1,0 +1,285 @@
+"""Dense decoder-only transformer (GQA + RoPE), pure JAX.
+
+Covers qwen2.5-3b, starcoder2-3b, qwen1.5-110b, llama3-405b and the Mistral
+backbone of llava-next. One stacked-parameter layer block is scanned with
+``jax.lax.scan`` (+ remat for training) so the HLO stays compact at 126
+layers. Supports: RMSNorm/LayerNorm, SwiGLU/GELU FFN, QKV bias, sliding-
+window attention, tied embeddings, full-cache decode and ring-buffer
+(sliding-window) decode.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (
+    DTYPE,
+    ParamSpec,
+    attention,
+    decode_attention,
+    layer_norm,
+    mlp,
+    rms_norm,
+    rope,
+    shard,
+)
+
+__all__ = [
+    "param_specs",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_cache",
+]
+
+
+def _layer_specs(cfg) -> dict:
+    d, hq, hkv, dh, ff = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff
+    L = cfg.n_layers
+    sp: dict[str, Any] = {
+        "attn_norm": ParamSpec((L, d), ("layers", "embed"), init="ones"),
+        "mlp_norm": ParamSpec((L, d), ("layers", "embed"), init="ones"),
+        "wq": ParamSpec((L, d, hq * dh), ("layers", "embed", "heads_flat")),
+        "wk": ParamSpec((L, d, hkv * dh), ("layers", "embed", None)),
+        "wv": ParamSpec((L, d, hkv * dh), ("layers", "embed", None)),
+        "wo": ParamSpec((L, hq * dh, d), ("layers", "heads_flat", "embed")),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = ParamSpec((L, hq * dh), ("layers", "heads_flat"), init="zeros")
+        sp["bk"] = ParamSpec((L, hkv * dh), ("layers", None), init="zeros")
+        sp["bv"] = ParamSpec((L, hkv * dh), ("layers", None), init="zeros")
+    if cfg.mlp_kind == "swiglu":
+        sp["mlp"] = {
+            "wi_gate": ParamSpec((L, d, ff), ("layers", "embed", "mlp")),
+            "wi_up": ParamSpec((L, d, ff), ("layers", "embed", "mlp")),
+            "wo": ParamSpec((L, ff, d), ("layers", "mlp", "embed")),
+        }
+    else:
+        sp["mlp"] = {
+            "wi": ParamSpec((L, d, ff), ("layers", "embed", "mlp")),
+            "wo": ParamSpec((L, ff, d), ("layers", "mlp", "embed")),
+        }
+    if cfg.norm_kind == "ln":
+        sp["attn_norm_b"] = ParamSpec((L, d), ("layers", "embed"), init="zeros")
+        sp["mlp_norm_b"] = ParamSpec((L, d), ("layers", "embed"), init="zeros")
+    return sp
+
+
+def param_specs(cfg) -> dict:
+    d = cfg.d_model
+    sp = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), init="embed"),
+        "layers": _layer_specs(cfg),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+    }
+    if cfg.norm_kind == "ln":
+        sp["final_norm_b"] = ParamSpec((d,), ("embed",), init="zeros")
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ParamSpec((d, cfg.vocab), ("embed", "vocab"))
+    return sp
+
+
+def _norm(x, w, cfg, gamma_key, beta_key, lw=None):
+    src = lw if lw is not None else w
+    if cfg.norm_kind == "ln":
+        return layer_norm(x, src[gamma_key], src[beta_key])
+    return rms_norm(x, src[gamma_key])
+
+
+def _qkv(x, lw, cfg, positions):
+    B, S, d = x.shape
+    dh = cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, lw["wq"])
+    k = jnp.einsum("bsd,de->bse", x, lw["wk"])
+    v = jnp.einsum("bsd,de->bse", x, lw["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lw["bq"], k + lw["bk"], v + lw["bv"]
+    q = q.reshape(B, S, cfg.n_heads, dh)
+    k = k.reshape(B, S, cfg.n_kv_heads, dh)
+    v = v.reshape(B, S, cfg.n_kv_heads, dh)
+    q = shard(q, "batch", "seq", "heads", None)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _layer_body(x, lw, cfg, positions):
+    h = _norm(x, None, cfg, "attn_norm", "attn_norm_b", lw)
+    q, k, v = _qkv(h, lw, cfg, positions)
+    o = attention(
+        q, k, v, causal=cfg.causal, sliding_window=cfg.sliding_window,
+        block_kv=cfg.attn_block_kv, unroll=cfg.unroll_inner,
+    )
+    o = jnp.einsum("bse,ed->bsd", o.reshape(*o.shape[:2], -1), lw["wo"])
+    x = x + o
+    h = _norm(x, None, cfg, "mlp_norm", "mlp_norm_b", lw)
+    x = x + mlp(h, lw["mlp"], cfg.mlp_kind)
+    return shard(x, "batch", "seq_res", "embed")
+
+
+def forward(
+    params: dict,
+    tokens: jnp.ndarray,                 # (B, S) int32
+    cfg,
+    prefix_embeds: jnp.ndarray | None = None,   # (B, S_pre, d) VLM patches
+    remat: bool = True,
+    last_only: bool = False,             # head on the final position only
+) -> jnp.ndarray:
+    """Training/prefill forward pass -> logits (B, S[, vocab-sharded])."""
+    x = params["embed"].astype(DTYPE)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(DTYPE), x], axis=1)
+    B, S, _ = x.shape
+    x = shard(x, "batch", "seq_res", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    body = lambda x, lw: (_layer_body(x, lw, cfg, positions), None)
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    G = cfg.remat_groups
+    if G > 1 and cfg.n_layers % G == 0 and not cfg.unroll_layers:
+        # 2-level ("sqrt") remat: only G group-boundary activations are
+        # saved; each group's layers are recomputed during its backward.
+        per = cfg.n_layers // G
+        grouped = jax.tree.map(
+            lambda a: a.reshape(G, per, *a.shape[1:]), params["layers"]
+        )
+
+        def group_body(x, glw):
+            y, _ = jax.lax.scan(body, x, glw)
+            return y, None
+
+        x, _ = jax.lax.scan(
+            jax.checkpoint(group_body, prevent_cse=False), x, grouped
+        )
+    else:
+        x, _ = jax.lax.scan(body, x, params["layers"],
+                            unroll=cfg.n_layers if cfg.unroll_layers else 1)
+
+    if last_only:
+        x = x[:, -1:]
+    x = _norm(x, params, cfg, "final_norm", "final_norm_b")
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Decode path (full cache or sliding-window ring buffer)
+# ---------------------------------------------------------------------------
+
+def cache_window(cfg, max_len: int) -> int:
+    """Physical cache length: the sliding window if one exists (ring), else
+    the full context."""
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    W = cache_window(cfg, max_len)
+    kv_shape = (cfg.n_layers, batch, W, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kv_shape, DTYPE),
+        "v": jnp.zeros(kv_shape, DTYPE),
+        "pos": jnp.zeros((batch,), jnp.int32),   # absolute next position
+    }
+
+
+def _decode_layer(x, lw, k_cache, v_cache, pos, cfg):
+    """One decode layer; returns (x, new_k_slot, new_v_slot)."""
+    B = x.shape[0]
+    h = _norm(x, None, cfg, "attn_norm", "attn_norm_b", lw)
+    positions = jnp.broadcast_to(pos[:, None], (B, 1))
+    q, k, v = _qkv(h, lw, cfg, positions)
+    W = k_cache.shape[1]
+    slot = (pos[0] % W).astype(jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    cache_len = jnp.minimum(pos[0] + 1, W)
+    o = decode_attention(q, k_cache, v_cache, cache_len)
+    o = jnp.einsum("bse,ed->bsd", o.reshape(B, 1, -1), lw["wo"])
+    x = x + o
+    h = _norm(x, None, cfg, "mlp_norm", "mlp_norm_b", lw)
+    x = x + mlp(h, lw["mlp"], cfg.mlp_kind)
+    return x, k_cache, v_cache
+
+
+def decode_step(params: dict, cache: dict, tokens: jnp.ndarray, cfg):
+    """One autoregressive step. tokens: (B, 1) -> (logits (B,1,V), cache)."""
+    x = params["embed"].astype(DTYPE)[tokens]
+    x = shard(x, "batch", "seq_res", "embed")
+    pos = cache["pos"]
+
+    def body(x, xs):
+        lw, kc, vc = xs
+        x, kc, vc = _decode_layer(x, lw, kc, vc, pos, cfg)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=cfg.n_layers if cfg.unroll_layers else 1,
+    )
+    x = _norm(x, params, cfg, "final_norm", "final_norm_b")
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    return shard(logits, "batch", "seq", "vocab"), new_cache
+
+
+def prefill(params: dict, tokens: jnp.ndarray, cfg, max_len: int | None = None):
+    """Run the prompt through the model, building the KV cache.
+
+    Returns (last-token logits, cache). Implemented as a full forward that
+    also captures per-layer K/V (the serving engine's paged path replaces
+    this with the Pallas kernel pipeline).
+    """
+    B, S = tokens.shape
+    max_len = max_len or S
+    W = cache_window(cfg, max_len)
+    x = params["embed"].astype(DTYPE)[tokens]
+    x = shard(x, "batch", "seq_res", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lw):
+        h = _norm(x, None, cfg, "attn_norm", "attn_norm_b", lw)
+        q, k, v = _qkv(h, lw, cfg, positions)
+        o = attention(
+            q, k, v, causal=cfg.causal, sliding_window=cfg.sliding_window,
+            block_kv=cfg.attn_block_kv, unroll=cfg.unroll_inner,
+        )
+        o = jnp.einsum("bse,ed->bsd", o.reshape(*o.shape[:2], -1), lw["wo"])
+        x = x + o
+        h = _norm(x, None, cfg, "mlp_norm", "mlp_norm_b", lw)
+        x = x + mlp(h, lw["mlp"], cfg.mlp_kind)
+        x = shard(x, "batch", "seq_res", "embed")
+        # keep the last W positions in the (ring) cache, slot = pos % W
+        k_keep = k[:, -W:]
+        v_keep = v[:, -W:]
+        if S >= W:
+            # slot s must hold absolute position p with p % W == s; the last
+            # W positions are [S-W, S), so index j -> slot (j + S) % W.
+            k_slot = jnp.roll(k_keep, S % W, axis=1)
+            v_slot = jnp.roll(v_keep, S % W, axis=1)
+        else:
+            pad = W - S
+            k_slot = jnp.pad(k_keep, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_slot = jnp.pad(v_keep, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, (k_slot, v_slot)
+
+    x, (k_cache, v_cache) = jax.lax.scan(
+        body, x, params["layers"],
+        unroll=cfg.n_layers if cfg.unroll_layers else 1,
+    )
+    x = _norm(x, params, cfg, "final_norm", "final_norm_b")
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], head)
+    cache = {
+        "k": k_cache,
+        "v": v_cache,
+        "pos": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, cache

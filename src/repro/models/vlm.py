@@ -1,0 +1,48 @@
+"""LLaVA-NeXT-style VLM: Mistral-7B backbone + projected patch embeddings.
+
+Per the assignment the vision tower is a stub: ``input_specs()`` supplies
+precomputed anyres patch embeddings (B, n_patches, vision_dim); this module
+owns only the multimodal projector (vision_dim -> d_model MLP) and defers
+everything else to the dense transformer backbone. Sequence layout is
+[patches | text]; the training loss is masked to text positions by the
+train step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tf
+from .layers import DTYPE, ParamSpec
+
+__all__ = ["param_specs", "forward", "decode_step", "init_cache", "project_patches"]
+
+
+def param_specs(cfg) -> dict:
+    sp = tf.param_specs(cfg)
+    sp["projector"] = {
+        "w1": ParamSpec((cfg.vision_dim, cfg.d_model), (None, "embed")),
+        "b1": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "w2": ParamSpec((cfg.d_model, cfg.d_model), ("embed", "embed2")),
+        "b2": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    return sp
+
+
+def project_patches(params, patches: jnp.ndarray) -> jnp.ndarray:
+    """(B, n_patches, vision_dim) -> (B, n_patches, d_model), 2-layer GELU MLP."""
+    p = params["projector"]
+    h = jnp.einsum("bpv,vd->bpd", patches.astype(DTYPE), p["w1"]) + p["b1"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(DTYPE)
+    return jnp.einsum("bpd,de->bpe", h, p["w2"]) + p["b2"]
+
+
+def forward(params, tokens, cfg, patches=None, remat: bool = True,
+            last_only: bool = False):
+    prefix = project_patches(params, patches) if patches is not None else None
+    return tf.forward(params, tokens, cfg, prefix_embeds=prefix, remat=remat,
+                      last_only=last_only)
+
+
+init_cache = tf.init_cache
+decode_step = tf.decode_step

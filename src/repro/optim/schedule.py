@@ -1,0 +1,27 @@
+"""Learning-rate schedules (warmup + cosine / constant / rsqrt)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "warmup_rsqrt", "constant"]
+
+
+def warmup_cosine(step, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def warmup_rsqrt(step, peak_lr: float, warmup: int):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    return jnp.where(step < warmup, warm, peak_lr * jnp.sqrt(warmup / jnp.maximum(step, 1)))
+
+
+def constant(step, peak_lr: float, warmup: int = 0):
+    step = jnp.asarray(step, jnp.float32)
+    if warmup:
+        return jnp.minimum(peak_lr, peak_lr * step / warmup)
+    return jnp.full_like(step, peak_lr)

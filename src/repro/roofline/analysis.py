@@ -1,0 +1,256 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``. Collective bytes
+are NOT in cost_analysis: we parse the compiled HLO text and sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. Sizes are whole-array (global) bytes, so
+they are divided by the participating chip count; a ring all-reduce moves
+2(n-1)/n of the shard per link, which we fold in as the standard factor.
+
+Hardware constants (TPU v5e-class target): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, 50 GB/s per ICI link.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'bf16[128,4096]'-style shape string."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2  # permutes etc. -- pairwise
+
+
+def _link_factor(kind: str, n: int) -> float:
+    """Per-chip ICI link bytes as a multiple of the op's *output* bytes
+    (post-SPMD shapes are per-device), assuming ring algorithms:
+      all-gather       out * (n-1)/n      (receives every other shard)
+      reduce-scatter   out * (n-1)        (input is n x output)
+      all-reduce       2 * out * (n-1)/n  (RS + AG on same-size buffer)
+      all-to-all       out * (n-1)/n
+      collective-permute  out             (point to point)
+    """
+    if n <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(n - 1)
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind == "all-to-all":
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-chip ICI link bytes by collective kind, parsed from compiled
+    (SPMD-partitioned, per-device) HLO text.
+
+    Lines look like ``%name = bf16[8,128]{1,0} all-reduce(...),
+    replica_groups=[16,16]<=[256]...`` (possibly tuple-shaped). The
+    output-shape bytes are scaled by the ring-traffic factor for the
+    parsed replica-group size.
+    """
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for kind in _COLLECTIVES:
+            # match "= <shape> kind(" (also -start variants; skip -done)
+            if f" {kind}(" not in s and f" {kind}-start(" not in s:
+                continue
+            eq = s.find("= ")
+            if eq < 0:
+                continue
+            shape_part = s[eq + 2:]
+            total = 0
+            if shape_part.startswith("("):
+                inner = shape_part[1 : shape_part.find(")")]
+                for comp in inner.split("),"):
+                    total += _shape_bytes(comp.split("{")[0])
+            else:
+                total = _shape_bytes(shape_part.split("{")[0].split(" ")[0])
+            out[kind] += total * _link_factor(kind, _group_size(s))
+            counts[kind] += 1
+            break
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+_DEF_RE = re.compile(r"%([\w\.\-]+) = (\w+\[[\d,]*\])")
+_DOT_OPERANDS_RE = re.compile(r" dot\(([^)]*)\)")
+
+
+def dot_bytes(hlo_text: str) -> float:
+    """Fusion-adjusted HBM-traffic estimate: operand + output bytes of every
+    dot (matmul) in the per-device HLO.
+
+    Rationale: on the TPU target, elementwise/norm ops fuse into the matmuls
+    that produce/consume them, so HBM traffic is dominated by matmul operand
+    streams; the CPU backend's ``bytes accessed`` counts every unfused
+    intermediate and overstates TPU traffic by an order of magnitude. This
+    estimate errs slightly high where the CPU inserts f32 converts around
+    bf16 dots, and slightly low by ignoring pure-elementwise traffic; it is
+    the number the memory roofline term uses, with the raw ``bytes
+    accessed`` kept alongside as an upper bound.
+    """
+    shapes: dict[str, str] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        shapes[m.group(1)] = m.group(2)
+    total = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " dot(" not in s:
+            continue
+        m = _DEF_RE.search(s)
+        if m:
+            total += _shape_bytes(m.group(2))
+        ops = _DOT_OPERANDS_RE.search(s)
+        if ops:
+            for ref in ops.group(1).split(","):
+                name = ref.strip().lstrip("%")
+                if name in shapes:
+                    total += _shape_bytes(shapes[name])
+    return total
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                     # global (sum over chips)
+    hlo_bytes: float                     # global, raw 'bytes accessed' (upper bound)
+    coll_bytes_link: float = 0.0         # per-chip ICI link bytes (ring-adjusted)
+    hbm_bytes_est: float = 0.0           # global, fusion-adjusted (dot streams)
+    coll_by_kind: dict = field(default_factory=dict)
+    model_flops: float = 0.0
+    per_device_memory: float = 0.0       # bytes (args+temps, memory_analysis)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        b = self.hbm_bytes_est or self.hlo_bytes
+        return b / (self.chips * HBM_BW)
+
+    @property
+    def t_memory_upper(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_link / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        t = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+        return max(t, key=t.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / max term: 1.0 == perfectly compute-bound."""
+        m = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / m if m else 0.0
+
+    def row(self) -> dict:
+        return {
+            **asdict(self),
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_memory_upper": self.t_memory_upper,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D for prefill, 2*N*B for decode
+    (N = active params for MoE)."""
+    D = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * D
+    if shape.kind == "prefill":
+        return 2.0 * n_active * D
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def count_params(specs) -> int:
+    import jax
+    import numpy as np
+
+    leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes")
+    )
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def active_params(cfg, specs) -> int:
+    """Active-per-token parameter count (MoE: top_k + shared experts only)."""
+    import numpy as np
+
+    total = count_params(specs)
+    if cfg.family != "moe":
+        return total
+    # subtract the inactive routed experts
+    per_expert = 3 * cfg.d_model * cfg.d_expert * cfg.n_layers
+    inactive = (cfg.n_experts - cfg.top_k) * per_expert
+    return int(total - inactive)

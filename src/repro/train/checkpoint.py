@@ -1,0 +1,167 @@
+"""Mesh-agnostic checkpointing with async save and atomic publish.
+
+Format: one ``.npz`` chunk per top-level state key plus a JSON manifest
+(step, flat key list, config fingerprint). Saves write to a temp directory
+and atomically rename -- a preempted save can never corrupt the latest
+checkpoint, and restart always finds a complete one (the checkpoint/restart
+half of fault tolerance; see repro.train.ft for the failure handling).
+
+Restore is *elastic*: arrays are loaded host-side and ``device_put`` with
+shardings derived from the current mesh, so a checkpoint written on a
+(16, 16) mesh restores onto (2, 16, 16) or onto 4 CPU devices unchanged
+(named-axis PartitionSpecs are mesh-shape-agnostic).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+
+_SEP = "//"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0][0:] or []:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def _to_savable(a: np.ndarray) -> tuple[np.ndarray, str]:
+    """npz can't hold ml_dtypes (bfloat16 etc.); store a same-width uint view
+    plus the dtype name for exact restoration."""
+    if a.dtype.kind == "V" or a.dtype.name not in np.sctypeDict:
+        width = a.dtype.itemsize
+        return a.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[width]), a.dtype.name
+    return a, ""
+
+
+def save(ckpt_dir: str, step: int, state, blocking: bool = True,
+         extra: dict | None = None) -> threading.Thread | None:
+    """Write state to ``<ckpt_dir>/step_<step>`` (tmp + atomic rename)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(state)
+    host = {}
+    viewed: dict[str, str] = {}
+    for k, v in flat.items():                 # device -> host now
+        arr, dtname = _to_savable(np.asarray(v))
+        host[k] = arr
+        if dtname:
+            viewed[k] = dtname
+
+    def _write():
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}_{os.getpid()}")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "state.npz"), **host)
+        manifest = {
+            "step": step,
+            "keys": sorted(host),
+            "viewed_dtypes": viewed,
+            "time": time.time(),
+            **(extra or {}),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and os.path.exists(
+            os.path.join(ckpt_dir, name, "manifest.json")
+        ):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, shardings=None):
+    """Load ``like``-structured state; place with ``shardings`` if given."""
+    import json as _json
+
+    import ml_dtypes
+
+    base = os.path.join(ckpt_dir, f"step_{step}")
+    data = np.load(os.path.join(base, "state.npz"))
+    with open(os.path.join(base, "manifest.json")) as f:
+        viewed = _json.load(f).get("viewed_dtypes", {})
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    out = []
+    for (path_elems, leaf) in paths:
+        key = _SEP.join(_path_str(p) for p in path_elems)
+        arr = data[key]
+        if key in viewed:
+            arr = arr.view(np.dtype(getattr(ml_dtypes, viewed[key])))
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings
+        )
+    else:
+        tree = jax.tree.map(jax.device_put, tree)
+    return tree
+
+
+class CheckpointManager:
+    """Keep-last-k manager with async saves for the training loop."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, every: int = 100):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.every = every
+        self._pending: threading.Thread | None = None
+
+    def maybe_save(self, step: int, state, force: bool = False) -> bool:
+        if not force and (self.every <= 0 or step % self.every):
+            return False
+        if self._pending is not None:
+            self._pending.join()
+        self._pending = save(self.dir, step, state, blocking=False)
+        self._gc(step)
+        return True
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self, now_step: int) -> None:
+        if not os.path.isdir(self.dir):
+            return
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.startswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)

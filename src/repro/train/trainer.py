@@ -1,0 +1,96 @@
+"""End-to-end training driver: data -> jit train_step -> checkpoint/FT."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..data.pipeline import DataConfig, prefetch, synthetic_batches
+from ..distributed.sharding import act_rules, state_shardings
+from ..models.layers import init_params, mesh_context
+from ..zoo import get_api
+from .checkpoint import CheckpointManager, latest_step, restore
+from .ft import RestartableLoop
+from .train_step import TrainHParams, init_train_state, make_train_step
+
+__all__ = ["Trainer"]
+
+
+@dataclass
+class Trainer:
+    cfg: object                     # ModelConfig
+    hp: TrainHParams
+    mesh: object | None = None
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    seed: int = 0
+
+    def __post_init__(self):
+        self.api = get_api(self.cfg)
+        self.specs = self.api.param_specs(self.cfg)
+        mdtype = (jnp.bfloat16 if self.cfg.moment_dtype == "bfloat16"
+                  else jnp.float32)
+        self._mdtype = mdtype
+        step = make_train_step(self.api, self.cfg, self.hp, moment_dtype=mdtype)
+        if self.mesh is not None:
+            rules = act_rules(self.mesh)
+            mesh = self.mesh
+
+            def wrapped(state, batch):
+                with mesh_context(mesh, rules):
+                    return step(state, batch)
+
+            p_shard = state_shardings(self.specs, mesh)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            state_shard = {
+                "params": p_shard,
+                "opt": {"m": p_shard, "v": p_shard,
+                        "count": NamedSharding(mesh, P())},
+            }
+            self.train_step = jax.jit(
+                wrapped, in_shardings=(state_shard, None),
+                out_shardings=(state_shard, None), donate_argnums=0,
+            )
+        else:
+            self.train_step = jax.jit(step, donate_argnums=0)
+        self.manager = CheckpointManager(self.ckpt_dir, every=self.ckpt_every)
+
+    def init_state(self):
+        params = init_params(self.specs, jax.random.PRNGKey(self.seed))
+        return init_train_state(params, self.hp, self._mdtype)
+
+    def data_iter(self, start_step: int = 0, batch_override: int | None = None):
+        dcfg = DataConfig(
+            global_batch=batch_override or self.hp_global_batch,
+            seq_len=self.hp_seq_len,
+            vocab=self.cfg.vocab,
+            seed=self.seed,
+        )
+        return prefetch(synthetic_batches(dcfg, start_step))
+
+    hp_global_batch: int = 8
+    hp_seq_len: int = 128
+
+    def fit(self, n_steps: int, resume: bool = True):
+        state = self.init_state()
+        start = 0
+        if resume:
+            last = latest_step(self.ckpt_dir)
+            if last is not None:
+                state = restore(self.ckpt_dir, last, jax.eval_shape(lambda: state))
+                start = last
+
+        def restore_fn(step):
+            return restore(self.ckpt_dir, step, jax.eval_shape(self.init_state))
+
+        loop = RestartableLoop(
+            self.train_step, self.manager,
+            lambda s: self.data_iter(s), max_restarts=3,
+        )
+        state, end = loop.run(state, n_steps, start_step=start,
+                              restore_fn=restore_fn)
+        self.manager.maybe_save(end, state, force=True)
+        self.manager.wait()
+        return state, loop.metrics_log

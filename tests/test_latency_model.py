@@ -1,0 +1,159 @@
+"""Unit + property tests for the paper's closed-form throughput models."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency_model import (
+    OpParams,
+    PAPER_EXAMPLE,
+    SystemParams,
+    US,
+    cost_performance_ratio,
+    fit_p_tsw_from_memory_only,
+    lstar_best,
+    lstar_mem,
+    normalized_throughput,
+    theta_best_inv,
+    theta_extended_inv,
+    theta_mask_inv,
+    theta_mem_inv,
+    theta_multi_inv,
+    theta_prob_inv,
+    theta_single_inv,
+)
+
+L_GRID = np.array([0.1, 0.3, 0.5, 1, 2, 3, 5, 8, 10]) * US
+
+
+class TestPaperValues:
+    """The worked example of Table 1 / Sec. 3 quotes concrete numbers."""
+
+    def test_E(self):
+        assert PAPER_EXAMPLE.E == pytest.approx(7.1 * US)
+
+    def test_lstar_memory_only(self):
+        # Eq. 4: 10 * (0.1 + 0.05) = 1.5 us
+        assert lstar_mem(PAPER_EXAMPLE) == pytest.approx(1.5 * US)
+
+    def test_lstar_with_io(self):
+        # Eq. 8: 1.5 + 10*7.1/10 = 8.6 us
+        assert lstar_best(PAPER_EXAMPLE) == pytest.approx(8.6 * US)
+
+    def test_masking_degradation_at_5us(self):
+        # Sec. 3.2.1: "the masking-only model predicts 29% throughput
+        # degradation at a memory latency of 5 usec"
+        norm = normalized_throughput(theta_mask_inv, np.array([5 * US]))
+        assert 1 - norm[0] == pytest.approx(0.29, abs=0.01)
+
+    def test_prob_degradation_at_5us(self):
+        # Sec. 3.2.2: "The degradation is much smaller, 7%"
+        norm = normalized_throughput(theta_prob_inv, np.array([5 * US]))
+        assert 1 - norm[0] == pytest.approx(0.07, abs=0.015)
+
+    def test_cpr_table6_ranges(self):
+        # Table 6, c = 0.4: flash 1.19-1.50, compressed DRAM 1.23-1.36
+        lo = cost_performance_ratio(0.4, 0.2, 0.19)
+        hi = cost_performance_ratio(0.4, 0.15, 0.02)
+        assert 1.15 < lo < 1.25 and 1.4 < hi < 1.55
+        lo = cost_performance_ratio(0.4, 0.5, 0.02)
+        hi = cost_performance_ratio(0.4, 1 / 3, 0.0)
+        assert 1.2 < lo < 1.3 and 1.3 < hi < 1.4
+
+
+class TestModelOrdering:
+    def test_mask_le_prob_le_best(self):
+        """Throughputs: masking-only <= probabilistic <= best-case (Fig. 3)."""
+        mask = 1 / theta_mask_inv(L_GRID)
+        prob = 1 / theta_prob_inv(L_GRID)
+        best = 1 / theta_best_inv(L_GRID)
+        assert np.all(mask <= prob * 1.0001)
+        assert np.all(prob <= best * 1.0001)
+
+    def test_monotone_in_latency(self):
+        for fn in (theta_single_inv, theta_mem_inv, theta_mask_inv,
+                   theta_prob_inv, theta_best_inv):
+            inv = fn(L_GRID)
+            assert np.all(np.diff(inv) >= -1e-12), fn.__name__
+
+    def test_mem_only_flat_then_linear(self):
+        p = PAPER_EXAMPLE
+        inv = theta_mem_inv(L_GRID, p)
+        flat = 1 / (p.T_mem + p.T_sw)
+        assert 1 / inv[0] == pytest.approx(flat)
+        # beyond the knee: slope L/P
+        assert inv[-1] == pytest.approx(L_GRID[-1] / p.P, rel=1e-6)
+
+
+@st.composite
+def op_params(draw):
+    return OpParams(
+        M=draw(st.integers(1, 20)),
+        T_mem=draw(st.floats(0.05, 0.3)) * US,
+        T_io_pre=draw(st.floats(0.5, 6.0)) * US,
+        T_io_post=draw(st.floats(0.1, 4.0)) * US,
+        T_sw=draw(st.floats(0.01, 0.2)) * US,
+        P=draw(st.integers(2, 16)),
+        S=draw(st.sampled_from([0.25, 0.5, 1.0, 2.0])),
+    )
+
+
+class TestProperties:
+    @settings(max_examples=30, deadline=None)
+    @given(op_params(), st.floats(0.1, 10.0), st.integers(6, 16))
+    def test_prob_between_mask_and_best(self, p, l_us, P):
+        # the Fig. 3 ordering; at P<=4 corners the additive-wait form of
+        # Theta_prob can exceed Theta_mask's max-form by ~1%, so the
+        # property is asserted in the paper regime P>=6.
+        p = OpParams(**{**p.__dict__, "P": P})
+        L = np.array([l_us * US])
+        mask = theta_mask_inv(L, p)[0]
+        prob = theta_prob_inv(L, p)[0]
+        best = theta_best_inv(L, p)[0]
+        assert best <= prob * 1.001
+        assert prob <= mask * 1.001
+
+    @settings(max_examples=30, deadline=None)
+    @given(op_params())
+    def test_dram_plateau(self, p):
+        """At DRAM latency every model reaches the latency-free plateau."""
+        L = np.array([0.05 * US])
+        plateau = p.S * ((p.M / p.S) * (p.T_mem + p.T_sw) + p.E)
+        assert theta_prob_inv(L, p)[0] <= plateau * 1.05
+
+    @settings(max_examples=20, deadline=None)
+    @given(op_params(), st.floats(0.2, 0.99))
+    def test_tiering_improves(self, p, rho):
+        """Eq. 15: offloading less (smaller rho) never hurts throughput."""
+        L = np.array([6 * US])
+        full = theta_prob_inv(L, p, sysp=SystemParams(rho=1.0))[0]
+        part = theta_prob_inv(L, p, sysp=SystemParams(rho=rho))[0]
+        assert part <= full * 1.001
+
+    @settings(max_examples=20, deadline=None)
+    @given(op_params(), st.floats(0.01, 0.2), st.integers(6, 16))
+    def test_eviction_hurts(self, p, eps, P):
+        # Model artifact (documented): post-eviction stalls drain the
+        # prefetch queue like post-IO subops (Sec. 3.2.3), so at P<=4 or
+        # with the S-split amplifying per-IO M, the predicted net effect
+        # can be slightly positive (up to ~4% at P=2). In the paper's base
+        # regime (S=1, P>=6) eviction never helps; assert the property there.
+        p = OpParams(**{**p.__dict__, "P": P, "S": 1.0})
+        L = np.array([5 * US])
+        clean = theta_prob_inv(L, p, sysp=SystemParams(eps=0.0))[0]
+        evict = theta_prob_inv(L, p, sysp=SystemParams(eps=eps))[0]
+        assert evict >= clean * 0.999
+
+    def test_extended_io_caps(self):
+        """Eq. 14: the SSD bandwidth/IOPS terms cap the throughput."""
+        p = PAPER_EXAMPLE
+        slow_ssd = SystemParams(R_io=50e3)
+        inv = theta_extended_inv(np.array([0.1 * US]), p, slow_ssd)
+        assert 1 / inv[0] <= 50e3 * 1.001
+
+
+def test_fit_p_tsw_roundtrip():
+    p = OpParams(P=12, T_sw=0.05 * US)
+    th = 1 / theta_mem_inv(L_GRID, p)
+    P_est, tsw_est = fit_p_tsw_from_memory_only(L_GRID, th, p.T_mem)
+    assert P_est == 12
+    assert tsw_est == pytest.approx(p.T_sw, rel=0.05)

@@ -1,0 +1,140 @@
+"""Simulator vs. closed-form model: the O3 validation, in test form."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency_model import (
+    OpParams,
+    US,
+    theta_mask_inv,
+    theta_mem_inv,
+    theta_prob_inv,
+)
+from repro.core.simulator import (
+    SimConfig,
+    best_over_threads,
+    microbenchmark_source,
+    simulate,
+)
+
+P_EX = OpParams()  # Table 1 example values
+
+
+def _mem_only_cfg(L, n=64):
+    return SimConfig(L_mem=L, P=10, n_threads=n, T_sw=P_EX.T_sw, seed=3)
+
+
+class TestMemoryOnly:
+    @pytest.mark.parametrize("l_us", [0.1, 1.0, 3.0, 10.0])
+    def test_matches_eq3(self, l_us):
+        """Memory-only throughput == Eq. 3 (both regimes) within 1%."""
+        src = microbenchmark_source(10, P_EX.T_mem, 0, 0, n_io=0)
+        r = simulate(_mem_only_cfg(l_us * US), src, 6000)
+        pred = 1 / theta_mem_inv(np.array([l_us * US]), P_EX)[0] / 10
+        assert r.throughput == pytest.approx(pred, rel=0.01)
+
+
+class TestMemoryAndIO:
+    @pytest.mark.parametrize("l_us", [0.1, 3.0, 5.0, 8.0])
+    def test_tracks_prob_model(self, l_us):
+        """With the paper's protocol (best thread count per point), the
+        simulated throughput is within [-8%, +15%] of Theta_prob and always
+        at least as high as the masking-only prediction (O2/O3)."""
+        src = microbenchmark_source(10, P_EX.T_mem, P_EX.T_io_pre, P_EX.T_io_post)
+        cfg = SimConfig(L_mem=l_us * US, P=10, T_sw=P_EX.T_sw, seed=5)
+        best, _ = best_over_threads(cfg, src, 5000, candidates=(24, 32, 48, 64))
+        L = np.array([l_us * US])
+        prob = 1 / theta_prob_inv(L, P_EX)[0]
+        mask = 1 / theta_mask_inv(L, P_EX)[0]
+        assert best.throughput >= mask * 0.97
+        assert 0.92 * prob <= best.throughput <= 1.20 * prob
+
+    def test_io_increases_latency_tolerance(self):
+        """O2 in sim form: normalized throughput at 5us is much higher with
+        IO than without."""
+        src_io = microbenchmark_source(10, P_EX.T_mem, P_EX.T_io_pre, P_EX.T_io_post)
+        src_no = microbenchmark_source(10, P_EX.T_mem, 0, 0, n_io=0)
+
+        def norm(src):
+            out = []
+            for l_us in (0.1, 5.0):
+                cfg = SimConfig(L_mem=l_us * US, P=10, T_sw=P_EX.T_sw, seed=7)
+                r, _ = best_over_threads(cfg, src, 4000, candidates=(24, 32, 48))
+                out.append(r.throughput)
+            return out[1] / out[0]
+
+        assert norm(src_io) > norm(src_no) + 0.2
+
+
+class TestExtendedScenarios:
+    def test_ssd_iops_cap(self):
+        src = microbenchmark_source(10, P_EX.T_mem, P_EX.T_io_pre, P_EX.T_io_post)
+        cfg = SimConfig(L_mem=0.1 * US, P=10, n_threads=64, R_io=30e3, seed=1)
+        r = simulate(cfg, src, 4000)
+        assert r.throughput <= 30e3 * 1.02
+
+    def test_memory_bandwidth_throttle(self):
+        src = microbenchmark_source(10, P_EX.T_mem, 0, 0, n_io=0)
+        cfg = SimConfig(L_mem=0.1 * US, P=10, n_threads=64,
+                        A_mem=64, B_mem=64 / (1.0 * US), seed=1)  # 1 line/us
+        r = simulate(cfg, src, 4000)
+        assert r.throughput <= 1e5 * 1.02  # 10 accesses/op at 1/us
+
+    def test_eviction_slows(self):
+        src = microbenchmark_source(10, P_EX.T_mem, P_EX.T_io_pre, P_EX.T_io_post)
+        base = simulate(SimConfig(L_mem=5 * US, n_threads=48, seed=2), src, 4000)
+        ev = simulate(SimConfig(L_mem=5 * US, n_threads=48, eps=0.2, seed=2),
+                      src, 4000)
+        assert ev.throughput < base.throughput
+
+    def test_tiering_helps(self):
+        src = microbenchmark_source(10, P_EX.T_mem, P_EX.T_io_pre, P_EX.T_io_post)
+        full = simulate(SimConfig(L_mem=8 * US, n_threads=48, rho=1.0, seed=2),
+                        src, 4000)
+        half = simulate(SimConfig(L_mem=8 * US, n_threads=48, rho=0.5, seed=2),
+                        src, 4000)
+        assert half.throughput >= full.throughput * 0.98
+
+    def test_tail_latency_mixture(self):
+        src = microbenchmark_source(10, P_EX.T_mem, P_EX.T_io_pre, P_EX.T_io_post)
+        mix = [(5 * US, 0.90), (14 * US, 0.099), (48 * US, 0.001)]  # Sec. 5.1
+        r = simulate(SimConfig(L_mem=mix, n_threads=64, seed=2), src, 4000)
+        flat = simulate(SimConfig(L_mem=5 * US, n_threads=64, seed=2), src, 4000)
+        assert 0.5 * flat.throughput < r.throughput <= flat.throughput * 1.02
+
+    def test_multicore_scales(self):
+        src = microbenchmark_source(10, P_EX.T_mem, P_EX.T_io_pre, P_EX.T_io_post)
+        one = simulate(SimConfig(L_mem=5 * US, n_threads=32, n_cores=1, seed=2),
+                       src, 3000)
+        four = simulate(SimConfig(L_mem=5 * US, n_threads=32, n_cores=4, seed=2),
+                        src, 12000)
+        assert four.throughput > 3.0 * one.throughput
+
+    def test_lock_contention_sublinear(self):
+        src = microbenchmark_source(10, P_EX.T_mem, P_EX.T_io_pre, P_EX.T_io_post)
+        four = simulate(SimConfig(L_mem=5 * US, n_threads=32, n_cores=4,
+                                  T_lock=2.0 * US, seed=2), src, 8000)
+        assert four.throughput <= 1 / (2.0 * US) * 1.05  # lock serializes
+
+
+class TestConservation:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 15), st.floats(0.1, 8.0), st.integers(4, 64))
+    def test_all_ops_complete(self, M, l_us, n_threads):
+        src = microbenchmark_source(M, 0.1 * US, 1.5 * US, 0.2 * US)
+        cfg = SimConfig(L_mem=l_us * US, n_threads=n_threads, seed=11)
+        r = simulate(cfg, src, 500)
+        assert r.ops == 500
+        assert r.throughput > 0
+        assert r.mem_stall_total >= 0
+
+    def test_load_latency_histogram(self):
+        """Fig. 10: most loads hit cache (zero stall) at moderate latency."""
+        src = microbenchmark_source(10, P_EX.T_mem, P_EX.T_io_pre, P_EX.T_io_post)
+        cfg = SimConfig(L_mem=2 * US, n_threads=32, seed=4,
+                        collect_load_hist=True)
+        r = simulate(cfg, src, 3000)
+        stalls = np.array(r.load_stalls)
+        assert (stalls == 0).mean() > 0.8

@@ -1,0 +1,150 @@
+"""End-to-end behaviour of the paper's system (the headline observations),
+plus dry-run machinery checks that don't need the 512-device environment."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, list_archs, smoke_config
+from repro.core import workloads
+from repro.core.kvstore import TreeIndexStore, run_trace
+from repro.core.latency_model import US, theta_mask_inv, theta_prob_inv
+from repro.core.simulator import SimConfig, best_over_threads, trace_source
+from repro.launch.specs import batch_specs, default_microbatches
+from repro.roofline.analysis import (
+    RooflineTerms,
+    collective_bytes,
+    dot_bytes,
+    model_flops,
+)
+
+
+def test_paper_headline_near_dram_at_5us():
+    """The paper's thesis, end to end on the tree-index store: with
+    prefetch+yield threads and async IO, throughput at L_mem = 5 us stays
+    within ~20% of DRAM throughput (the paper reports 2-19% degradation
+    across stores/settings; our tree engine with its measured parameters
+    sits in that band)."""
+    store = TreeIndexStore(50_000, seed=1)
+    wl = workloads.uniform(50_000, 20_000, (1, 0), seed=2)
+    tr = run_trace(store, wl)
+    src = trace_source(tr.ops)
+    thr = {}
+    for l_us in (0.1, 5.0):
+        cfg = SimConfig(L_mem=l_us * US, P=12, seed=7)
+        r, _ = best_over_threads(cfg, src, 6000, candidates=(24, 40, 56))
+        thr[l_us] = r.throughput
+    degradation = 1 - thr[5.0] / thr[0.1]
+    assert degradation < 0.20
+
+
+def test_masking_only_underestimates():
+    """O3's second half: the masking-only model underestimates measured
+    throughput at long latency (the paper: by up to 32.7%)."""
+    store = TreeIndexStore(50_000, seed=1)
+    wl = workloads.uniform(50_000, 20_000, (1, 0), seed=2)
+    tr = run_trace(store, wl)
+    p = tr.op_params(store.times, P=12, T_sw=0.05 * US)
+    src = trace_source(tr.ops)
+    cfg = SimConfig(L_mem=8 * US, P=12, seed=7)
+    r, _ = best_over_threads(cfg, src, 6000, candidates=(24, 40, 56))
+    mask = 1 / theta_mask_inv(np.array([8 * US]), p)[0]
+    prob = 1 / theta_prob_inv(np.array([8 * US]), p)[0]
+    assert r.throughput > mask * 1.05
+    assert abs(r.throughput - prob) < abs(r.throughput - mask)
+
+
+class TestDryRunMachinery:
+    def test_all_cells_enumerable(self):
+        """40 (arch x shape) cells exist; skips are exactly the documented
+        long_500k inapplicables."""
+        from repro.configs import shape_applicable
+
+        cells = [(a, s) for a in list_archs() for s in SHAPES]
+        assert len(cells) == 40
+        skips = [c for c in cells
+                 if not shape_applicable(get_config(c[0]), SHAPES[c[1]])[0]]
+        assert len(skips) == 6
+        assert all(s == "long_500k" for _, s in skips)
+
+    def test_batch_specs_cover_inputs(self):
+        for arch in list_archs():
+            cfg = get_config(arch)
+            for sname, shape in SHAPES.items():
+                specs = batch_specs(cfg, shape)
+                assert "tokens" in specs
+                if shape.kind == "train":
+                    assert specs["targets"].shape == (
+                        shape.global_batch, shape.seq_len)
+                if cfg.family == "vlm" and shape.kind != "decode":
+                    assert "patches" in specs
+
+    def test_default_microbatches_divide(self):
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+
+        for arch in list_archs():
+            cfg = get_config(arch)
+            mb = default_microbatches(cfg, SHAPES["train_4k"], FakeMesh())
+            assert SHAPES["train_4k"].global_batch % mb == 0
+
+    def test_collective_bytes_parser(self):
+        hlo = """
+        %all-reduce.1 = f32[128,256]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[4,2]<=[8]
+        %ag = bf16[64,64]{1,0} all-gather(%p), replica_groups={{0,1,2,3}}, dimensions={0}
+        %rs = bf16[8,64]{1,0} reduce-scatter(%q), replica_groups=[2,8]<=[16]
+        """
+        out = collective_bytes(hlo)
+        counts = out.pop("_counts")
+        assert counts["all-reduce"] == 1 and counts["all-gather"] == 1
+        # all-reduce over groups of 2: 128*256*4 * 2*(2-1)/2
+        assert out["all-reduce"] == pytest.approx(128 * 256 * 4 * 1.0)
+        # all-gather over groups of 4: 64*64*2 * (4-1)/4
+        assert out["all-gather"] == pytest.approx(64 * 64 * 2 * 0.75)
+        # reduce-scatter over groups of 8: 8*64*2 * (8-1)
+        assert out["reduce-scatter"] == pytest.approx(8 * 64 * 2 * 7)
+
+    def test_dot_bytes_parser(self):
+        hlo = """
+        %p0 = bf16[128,64]{1,0} parameter(0)
+        %p1 = bf16[64,32]{1,0} parameter(1)
+        %dot = f32[128,32]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+        """
+        got = dot_bytes(hlo)
+        assert got == pytest.approx(128 * 64 * 2 + 64 * 32 * 2 + 128 * 32 * 4)
+
+    def test_roofline_terms(self):
+        t = RooflineTerms(
+            arch="x", shape="train_4k", mesh="single", chips=256,
+            hlo_flops=1e18, hlo_bytes=1e15, coll_bytes_link=5e10,
+            hbm_bytes_est=5e14, model_flops=6e17,
+        )
+        assert t.t_compute == pytest.approx(19.83, rel=1e-3)
+        assert t.t_memory == pytest.approx(5e14 / (256 * 819e9))
+        assert t.t_collective == pytest.approx(1.0)
+        assert t.bottleneck == "compute"
+        assert 0 < t.useful_ratio < 1
+        assert t.roofline_fraction == pytest.approx(1.0)  # compute-bound
+        coll = RooflineTerms(
+            arch="x", shape="s", mesh="m", chips=256,
+            hlo_flops=1e16, hlo_bytes=1e15, coll_bytes_link=5e11,
+            hbm_bytes_est=5e14, model_flops=6e15,
+        )
+        assert coll.bottleneck == "collective"
+        assert coll.roofline_fraction < 0.1
+
+    def test_model_flops_kinds(self):
+        cfg = get_config("qwen2.5-3b")
+        n = 3e9
+        tr = model_flops(cfg, SHAPES["train_4k"], n, n)
+        pf = model_flops(cfg, SHAPES["prefill_32k"], n, n)
+        dc = model_flops(cfg, SHAPES["decode_32k"], n, n)
+        assert tr == pytest.approx(6 * n * 256 * 4096)
+        assert pf == pytest.approx(2 * n * 32 * 32768)
+        assert dc == pytest.approx(2 * n * 128)
+
+
+def test_smoke_configs_are_small():
+    for arch, cfg in ARCHS.items():
+        sc = smoke_config(cfg)
+        assert sc.d_model <= 256 and sc.vocab <= 1024
+        assert sc.family == cfg.family

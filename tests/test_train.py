@@ -1,0 +1,191 @@
+"""Training substrate: trainer, checkpoint/restart, stragglers, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, smoke_config
+from repro.models.layers import init_params
+from repro.optim.grad_compress import dequantize, ef_compress_grads, quantize
+from repro.optim.schedule import constant, warmup_cosine, warmup_rsqrt
+from repro.train.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.train.ft import RestartableLoop, StragglerDetector
+from repro.train.train_step import TrainHParams, init_train_state, make_train_step
+from repro.train.trainer import Trainer
+from repro.zoo import get_api
+
+
+def test_trainer_learns(tmp_path):
+    cfg = smoke_config(ARCHS["qwen2.5-3b"])
+    hp = TrainHParams(peak_lr=1e-3, warmup=10, total_steps=120)
+    tr = Trainer(cfg, hp, ckpt_dir=str(tmp_path), ckpt_every=0)
+    tr.hp_global_batch, tr.hp_seq_len = 16, 48
+    _, log = tr.fit(120, resume=False)
+    first = np.mean([m["loss"] for m in log[:10]])
+    last = np.mean([m["loss"] for m in log[-10:]])
+    assert last < first - 1.0  # clearly learning the synthetic structure
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = smoke_config(ARCHS["starcoder2-3b"])
+    api = get_api(cfg)
+    hp = TrainHParams(total_steps=10, warmup=1)
+    params = init_params(api.param_specs(cfg), jax.random.PRNGKey(0))
+    state = init_train_state(params, hp)
+    save(str(tmp_path), 7, state)
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.eval_shape(lambda: state)
+    back = restore(str(tmp_path), 7, like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_determinism(tmp_path):
+    """Train 6 steps straight == train 3, checkpoint, restore, train 3."""
+    cfg = smoke_config(ARCHS["qwen2.5-3b"])
+    api = get_api(cfg)
+    hp = TrainHParams(peak_lr=1e-3, warmup=1, total_steps=6)
+    step = jax.jit(make_train_step(api, cfg, hp))
+
+    def batch(i):
+        rng = jax.random.PRNGKey(100 + i)
+        t = jax.random.randint(rng, (4, 17), 0, cfg.vocab)
+        return {"tokens": t[:, :-1], "targets": t[:, 1:],
+                "loss_mask": jnp.ones((4, 16), jnp.float32)}
+
+    params = init_params(api.param_specs(cfg), jax.random.PRNGKey(0))
+    s_a = init_train_state(params, hp)
+    for i in range(6):
+        s_a, _ = step(s_a, batch(i))
+
+    s_b = init_train_state(params, hp)
+    for i in range(3):
+        s_b, _ = step(s_b, batch(i))
+    save(str(tmp_path), 3, s_b)
+    s_b = restore(str(tmp_path), 3, jax.eval_shape(lambda: s_b))
+    for i in range(3, 6):
+        s_b, _ = step(s_b, batch(i))
+
+    for a, b in zip(jax.tree.leaves(s_a["params"]), jax.tree.leaves(s_b["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restartable_loop_recovers(tmp_path):
+    """Inject a failure mid-run; the loop restores and finishes."""
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 5:
+            raise RuntimeError("injected preemption")
+        return state + 1, {"loss": float(state)}
+
+    mgr = CheckpointManager(str(tmp_path), every=2)
+    saved = {}
+
+    def save_and_track(step, state, force=False):
+        saved[step] = int(state)
+        return CheckpointManager.maybe_save(mgr, step, jnp.asarray(state), force)
+
+    mgr.maybe_save = save_and_track  # type: ignore[method-assign]
+
+    def data_iter(start):
+        def gen():
+            i = start
+            while True:
+                yield i
+                i += 1
+        return gen()
+
+    def restore_fn(step):
+        return jnp.asarray(saved[step])
+
+    loop = RestartableLoop(step_fn, mgr, data_iter, max_restarts=2)
+    state, end = loop.run(jnp.asarray(0), 8, restore_fn=restore_fn)
+    assert end == 8
+    assert int(state) == 8
+    assert loop.restarts == 1
+
+
+def test_straggler_detector():
+    det = StragglerDetector(n_hosts=8, window=8, threshold=2.0, grace_steps=3)
+    rng = np.random.default_rng(0)
+    flagged: list[int] = []
+    for step in range(12):
+        times = rng.normal(1.0, 0.05, 8)
+        times[3] = 3.5  # host 3 is consistently 3.5x slower
+        flagged = det.observe(times)
+    assert flagged == [3]
+
+    det2 = StragglerDetector(n_hosts=8, grace_steps=3)
+    for step in range(12):
+        times = rng.normal(1.0, 0.05, 8)
+        if step == 4:
+            times[5] = 5.0  # one transient blip: must NOT flag
+        assert 5 not in det2.observe(times)
+
+
+class TestGradCompression:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,
+                    max_size=64))
+    def test_quantize_bound(self, xs):
+        x = jnp.asarray(xs, jnp.float32)
+        q, s = quantize(x)
+        err = jnp.abs(dequantize(q, s) - x)
+        assert float(jnp.max(err)) <= float(s) / 2 + 1e-6
+
+    def test_error_feedback_preserves_sum(self):
+        """EF invariant: dequantized + residual == grad + old residual."""
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, (32, 8)),
+                              jnp.float32)}
+        e = {"w": jnp.zeros((32, 8), jnp.float32)}
+        q, s, e2 = ef_compress_grads(g, e)
+        back = dequantize(q["w"], s["w"])
+        np.testing.assert_allclose(back + e2["w"], g["w"], atol=1e-5)
+
+    def test_ef_converges_on_repeat(self):
+        """Repeatedly compressing the same gradient transmits it in full."""
+        g = jnp.asarray(np.random.default_rng(1).normal(0, 1, (64,)), jnp.float32)
+        e = jnp.zeros_like(g)
+        sent = jnp.zeros_like(g)
+        for _ in range(8):
+            q, s, e_new = ef_compress_grads({"g": g}, {"g": e})
+            sent = sent + dequantize(q["g"], s["g"])
+            e = e_new["g"]
+        np.testing.assert_allclose(sent / 8, g, atol=0.02)
+
+
+def test_schedules():
+    assert float(warmup_cosine(0, 1e-3, 10, 100)) == 0.0
+    assert float(warmup_cosine(10, 1e-3, 10, 100)) == pytest.approx(1e-3)
+    assert float(warmup_cosine(100, 1e-3, 10, 100)) == pytest.approx(1e-4)
+    assert float(warmup_rsqrt(40, 1e-3, 10)) == pytest.approx(5e-4)
+    assert float(constant(5, 1e-3)) == pytest.approx(1e-3)
+
+
+def test_microbatch_equivalence():
+    """mb=1 and mb=4 give (nearly) the same gradients -> same first step."""
+    cfg = smoke_config(ARCHS["qwen2.5-3b"])
+    api = get_api(cfg)
+    params = init_params(api.param_specs(cfg), jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(1)
+    t = jax.random.randint(rng, (8, 17), 0, cfg.vocab)
+    batch = {"tokens": t[:, :-1], "targets": t[:, 1:],
+             "loss_mask": jnp.ones((8, 16), jnp.float32)}
+    outs = []
+    for mb in (1, 4):
+        hp = TrainHParams(peak_lr=1e-2, warmup=0, total_steps=10,
+                          microbatches=mb)
+        step = jax.jit(make_train_step(api, cfg, hp,
+                                       accum_dtype=jnp.float32))
+        state = init_train_state(init_params(api.param_specs(cfg),
+                                             jax.random.PRNGKey(0)), hp)
+        state, m = step(state, batch)
+        outs.append(state["params"]["embed"])
+    np.testing.assert_allclose(
+        outs[0].astype(jnp.float32), outs[1].astype(jnp.float32), atol=2e-2
+    )
