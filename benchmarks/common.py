@@ -4,34 +4,59 @@ Every benchmark prints CSV rows ``name,us_per_call,derived`` where
 ``us_per_call`` is the simulated (virtual-time) microseconds per KV
 operation at the row's operating point and ``derived`` carries the
 figure-specific quantity (normalized throughput, model error, ...).
+
+Latency sweeps run through :func:`repro.core.sim.sweep_latency`: one
+compiled trace shared across the whole latency x threads grid, cells fanned
+out over worker processes.  ``benchmarks.run`` can point ``SWEEP_CACHE`` at
+a directory (``--sweep-cache``) to memoize finished cells across runs and
+``SWEEP_PROCESSES`` (``--processes``) at a worker count.
 """
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
 from repro.core import workloads
-from repro.core.kvstore import LSMStore, TreeIndexStore, TwoTierCacheStore, run_trace
-from repro.core.latency_model import US, OpParams
-from repro.core.simulator import SimConfig, best_over_threads, simulate, trace_source
+from repro.core.engines import LSMStore, TreeIndexStore, TwoTierCacheStore, run_trace
+from repro.core.latency_model import US
+from repro.core.sim import SimConfig, sweep_latency
 
 L_SWEEP_US = (0.1, 0.3, 0.5, 1, 2, 3, 5, 8, 10)
 N_CANDIDATES = (16, 24, 32, 48, 64)
+
+# Set by benchmarks.run from --processes / --sweep-cache.
+SWEEP_PROCESSES: int | None = None
+SWEEP_CACHE: str | None = None
 
 
 def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.4f},{derived}")
 
 
+def sweep_points(source, l_us_list=L_SWEEP_US, candidates=N_CANDIDATES,
+                 n_ops=5000, P=12, seed=7, **cfg_kw):
+    """Paper protocol over the fast pipeline: best-over-threads per latency.
+
+    Returns ``{l_us: SweepPoint}`` in input order.  ``source`` is anything
+    :func:`sweep_latency` accepts (compiled trace, TraceResult, op list, or
+    a legacy callable source).
+    """
+    cfg = SimConfig(P=P, seed=seed, **cfg_kw)
+    pts = sweep_latency(
+        cfg,
+        source,
+        [l_us * US for l_us in l_us_list],
+        candidates,
+        n_ops=n_ops,
+        processes=SWEEP_PROCESSES,
+        cache_dir=SWEEP_CACHE,
+    )
+    return dict(zip(l_us_list, pts))
+
+
 def sweep_trace(src, l_us_list=L_SWEEP_US, n_ops=5000, P=12, seed=7, **cfg_kw):
-    """Best-over-threads throughput per latency point (paper protocol)."""
-    out = {}
-    for l_us in l_us_list:
-        cfg = SimConfig(L_mem=l_us * US, P=P, seed=seed, **cfg_kw)
-        r, n = best_over_threads(cfg, src, n_ops, candidates=N_CANDIDATES)
-        out[l_us] = r
-    return out
+    """Legacy-shaped helper: ``{l_us: SimResult}`` (kept for callers of the
+    old API; new code should use :func:`sweep_points`)."""
+    pts = sweep_points(src, l_us_list, N_CANDIDATES, n_ops=n_ops, P=P,
+                       seed=seed, **cfg_kw)
+    return {l_us: pt.result for l_us, pt in pts.items()}
 
 
 def build_engines(nk=100_000, nops=30_000):
@@ -53,6 +78,7 @@ def build_engines(nk=100_000, nops=30_000):
 
 
 def engine_trace(name, store, wl):
+    """Trace + model params + the compiled trace (the sweep-ready source)."""
     tr = run_trace(store, wl)
     p = tr.op_params(store.times, P=12, T_sw=0.05 * US)
-    return tr, p, trace_source(tr.ops)
+    return tr, p, tr.trace

@@ -11,7 +11,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import workloads
-from repro.core.kvstore import LSMStore, TreeIndexStore, TwoTierCacheStore, run_trace
+from repro.core.engines import LSMStore, TreeIndexStore, TwoTierCacheStore, run_trace
 from repro.core.latency_model import (
     US,
     OpParams,
@@ -25,10 +25,16 @@ from repro.core.latency_model import (
     theta_prob_inv,
     theta_single_inv,
 )
-from repro.core.simulator import SimConfig, best_over_threads, microbenchmark_source, simulate, trace_source
+from repro.core.sim import (
+    SimConfig,
+    microbenchmark_source,
+    simulate,
+    simulate_compiled,
+    sweep_latency,
+)
 from repro.core.tiering import FLASH_CXL
 
-from .common import L_SWEEP_US, N_CANDIDATES, build_engines, emit, engine_trace, sweep_trace
+from .common import L_SWEEP_US, N_CANDIDATES, build_engines, emit, engine_trace, sweep_points
 
 
 def fig3_model_curves() -> None:
@@ -71,17 +77,17 @@ def fig11_microbenchmark() -> None:
     }
     for tag, p in combos.items():
         src = microbenchmark_source(int(p.M), p.T_mem, p.T_io_pre, p.T_io_post)
+        pts = sweep_points(src, L_SWEEP_US, N_CANDIDATES, n_ops=5000,
+                           P=p.P, seed=5, T_sw=p.T_sw)
         errs = []
-        for l_us in L_SWEEP_US:
-            cfg = SimConfig(L_mem=l_us * US, P=p.P, T_sw=p.T_sw, seed=5)
-            r, _ = best_over_threads(cfg, src, 5000, candidates=N_CANDIDATES)
+        for l_us, pt in pts.items():
             L = np.array([l_us * US])
             prob = 1 / theta_prob_inv(L, p)[0]
             mask = 1 / theta_mask_inv(L, p)[0]
-            errs.append(r.throughput / prob - 1)
-            emit(f"fig11{tag}/L{l_us}us", 1e6 / r.throughput,
-                 f"sim_over_prob={r.throughput / prob:.4f};"
-                 f"sim_over_mask={r.throughput / mask:.4f}")
+            errs.append(pt.throughput / prob - 1)
+            emit(f"fig11{tag}/L{l_us}us", 1e6 / pt.throughput,
+                 f"sim_over_prob={pt.throughput / prob:.4f};"
+                 f"sim_over_mask={pt.throughput / mask:.4f}")
         emit(f"fig11{tag}/max_model_err", 0.0,
              f"max_abs_rel={max(abs(e) for e in errs):.4f}")
 
@@ -89,18 +95,18 @@ def fig11_microbenchmark() -> None:
 def fig11_kvstores() -> None:
     """Fig. 11(c)(d)(e): the three engines vs models (single core)."""
     for name, (store, wl) in build_engines().items():
-        tr, p, src = engine_trace(name, store, wl)
+        tr, p, trace = engine_trace(name, store, wl)
+        pts = sweep_points(trace, (0.1, 1, 3, 5, 8, 10), N_CANDIDATES,
+                           n_ops=5000, P=p.P, seed=7)
         base = None
-        for l_us in (0.1, 1, 3, 5, 8, 10):
-            cfg = SimConfig(L_mem=l_us * US, P=p.P, seed=7)
-            r, _ = best_over_threads(cfg, src, 5000, candidates=N_CANDIDATES)
+        for l_us, pt in pts.items():
             if base is None:
-                base = r.throughput
+                base = pt.throughput
             L = np.array([l_us * US])
             prob = 1 / theta_prob_inv(L, p)[0]
-            emit(f"fig11/{name}/L{l_us}us", 1e6 / r.throughput,
-                 f"norm={r.throughput / base:.4f};"
-                 f"sim_over_prob={r.throughput / prob:.4f}")
+            emit(f"fig11/{name}/L{l_us}us", 1e6 / pt.throughput,
+                 f"norm={pt.throughput / base:.4f};"
+                 f"sim_over_prob={pt.throughput / prob:.4f}")
         emit(f"fig11/{name}/params", 0.0,
              f"M={p.M:.1f};S={p.S:.3f};Tmem_us={p.T_mem / US:.3f}")
 
@@ -152,12 +158,12 @@ def fig12_extended() -> None:
 def fig14_multicore() -> None:
     """Fig. 14: multi-core scaling at 5 us with lock contention."""
     store, wl = build_engines()["aerospike-like"]
-    tr, p, src = engine_trace("aerospike-like", store, wl)
+    tr, p, trace = engine_trace("aerospike-like", store, wl)
     base = None
     for cores in (1, 2, 4, 8, 16):
         cfg = SimConfig(L_mem=5 * US, n_threads=32, n_cores=cores,
                         T_lock=0.15 * US, R_io=2.2e6, seed=9)
-        r = simulate(cfg, src, 3000 * cores)
+        r = simulate_compiled(cfg, trace, 3000 * cores)
         if base is None:
             base = r.throughput
         emit(f"fig14/{cores}cores", 1e6 / r.throughput * cores,
@@ -184,12 +190,10 @@ def fig15_settings() -> None:
     }
     degs = []
     for name, (store, wl) in variants.items():
-        tr, p, src = engine_trace(name, store, wl)
-        thr = {}
-        for l_us in (0.1, 5.0):
-            cfg = SimConfig(L_mem=l_us * US, P=p.P, seed=11)
-            r, _ = best_over_threads(cfg, src, 4000, candidates=(24, 40, 56))
-            thr[l_us] = r.throughput
+        tr, p, trace = engine_trace(name, store, wl)
+        pts = sweep_points(trace, (0.1, 5.0), (24, 40, 56), n_ops=4000,
+                           P=p.P, seed=11)
+        thr = {l_us: pt.throughput for l_us, pt in pts.items()}
         d = 1 - thr[5.0] / thr[0.1]
         degs.append(max(d, 1e-4))
         emit(f"fig15/{name}", 1e6 / thr[5.0], f"degradation_at_5us={d:.4f}")
@@ -216,11 +220,11 @@ def fig16_threads() -> None:
 def fig17_op_latency() -> None:
     """Fig. 17: KV operation latency grows mildly with memory latency."""
     store, wl = build_engines()["aerospike-like"]
-    tr, p, src = engine_trace("aerospike-like", store, wl)
+    tr, p, trace = engine_trace("aerospike-like", store, wl)
     base = None
     for l_us in (0.1, 2, 5, 10):
         cfg = SimConfig(L_mem=l_us * US, n_threads=32, seed=15)
-        r = simulate(cfg, src, 4000, collect_latency=True)
+        r = simulate_compiled(cfg, trace, 4000, collect_latency=True)
         lat = r.mean_op_latency
         if base is None:
             base = lat
@@ -231,12 +235,12 @@ def table6_cpr() -> None:
     """Table 6: cost-performance ratios, with the tail-latency profile of
     Sec. 5.1 driving the measured degradation d for flash."""
     store, wl = build_engines()["aerospike-like"]
-    tr, p, src = engine_trace("aerospike-like", store, wl)
+    tr, p, trace = engine_trace("aerospike-like", store, wl)
     thr = {}
     for tag, lmem in (("dram", 0.1 * US), ("flash", FLASH_CXL.latency_spec())):
-        cfg = SimConfig(L_mem=lmem, P=p.P, seed=17)
-        r, _ = best_over_threads(cfg, src, 5000, candidates=N_CANDIDATES)
-        thr[tag] = r.throughput
+        cfg = SimConfig(P=p.P, seed=17)
+        (pt,) = sweep_latency(cfg, trace, [lmem], N_CANDIDATES, n_ops=5000)
+        thr[tag] = pt.throughput
     d_flash = 1 - thr["flash"] / thr["dram"]
     emit("table6/flash_tail_degradation", 1e6 / thr["flash"], f"d={d_flash:.4f}")
     for name, b, d in (
@@ -260,12 +264,12 @@ def fig18_capacity() -> None:
     tr_b = run_trace(big, wl)
     p_s = tr_s.op_params(small.times, 12, 0.05 * US)
     p_b = tr_b.op_params(big.times, 12, 0.05 * US)
-    r_small, _ = best_over_threads(
-        SimConfig(L_mem=0.1 * US, seed=21), trace_source(tr_s.ops), 5000,
-        candidates=N_CANDIDATES)
-    r_big, _ = best_over_threads(
-        SimConfig(L_mem=FLASH_CXL.latency_spec(), seed=21),
-        trace_source(tr_b.ops), 5000, candidates=N_CANDIDATES)
+    (pt_small,) = sweep_latency(SimConfig(seed=21), tr_s.trace,
+                                [0.1 * US], N_CANDIDATES, n_ops=5000)
+    (pt_big,) = sweep_latency(SimConfig(seed=21), tr_b.trace,
+                              [FLASH_CXL.latency_spec()], N_CANDIDATES,
+                              n_ops=5000)
+    r_small, r_big = pt_small.result, pt_big.result
     gain = r_big.throughput / r_small.throughput - 1
     emit("fig18/lsm_small_dram", 1e6 / r_small.throughput,
          f"hit={tr_s.hit_stats['block_cache']:.3f}")

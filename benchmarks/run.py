@@ -3,6 +3,12 @@
 
 ``python -m benchmarks.run``            -- paper figures + kernels + roofline
 ``python -m benchmarks.run --only fig11``
+``python -m benchmarks.run --only fig11 --processes 4 --sweep-cache .sweep_cache``
+
+Latency sweeps go through the batched :func:`repro.core.sim.sweep_latency`
+pipeline; ``--processes`` sets the worker-process count for the grid and
+``--sweep-cache`` memoizes finished sweep cells on disk so repeated runs
+only simulate what changed.
 """
 from __future__ import annotations
 
@@ -15,9 +21,17 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter on bench names")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="worker processes for sweep grids (default: cpu count)")
+    ap.add_argument("--sweep-cache", default=None, metavar="DIR",
+                    help="directory memoizing finished sweep cells "
+                         "(e.g. .sweep_cache)")
     args = ap.parse_args()
 
-    from . import kernels_bench, paper_figs, roofline_table
+    from . import common, kernels_bench, paper_figs, roofline_table
+
+    common.SWEEP_PROCESSES = args.processes
+    common.SWEEP_CACHE = args.sweep_cache
 
     benches = [(f.__name__, f) for f in paper_figs.ALL]
     benches += [(f.__name__, f) for f in kernels_bench.ALL]

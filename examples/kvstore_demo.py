@@ -5,45 +5,44 @@ Run:  PYTHONPATH=src python examples/kvstore_demo.py
 import numpy as np
 
 from repro.core import workloads
-from repro.core.kvstore import LSMStore, TreeIndexStore, run_trace
-from repro.core.latency_model import US, theta_mask_inv, theta_mem_inv, theta_prob_inv
-from repro.core.simulator import SimConfig, best_over_threads, microbenchmark_source, trace_source
+from repro.core.engines import LSMStore, TreeIndexStore, run_trace
+from repro.core.latency_model import US, theta_mask_inv, theta_prob_inv
+from repro.core.sim import SimConfig, microbenchmark_source, sweep_latency
 from repro.core.tiering import FLASH_CXL
 
 print("O1: even with prefetching, memory-only traversal slows down:")
 src = microbenchmark_source(10, 0.1 * US, 0, 0, n_io=0)
-for L in (1, 5):
-    r, _ = best_over_threads(SimConfig(L_mem=L * US, P=10), src, 4000)
-    print(f"  L={L}us: {r.throughput/1e3:7.1f} kops/s")
+for pt in sweep_latency(SimConfig(P=10), src, [1 * US, 5 * US], n_ops=4000):
+    print(f"  L={pt.L_mem / US:.0f}us: {pt.throughput / 1e3:7.1f} kops/s")
 
 print("O2/O3: IO makes the same traversal latency-tolerant:")
 src = microbenchmark_source(10, 0.1 * US, 4 * US, 3 * US)
 base = None
-for L in (0.1, 5):
-    r, _ = best_over_threads(SimConfig(L_mem=L * US, P=10), src, 4000)
-    base = base or r.throughput
-    print(f"  L={L}us: {r.throughput/1e3:7.1f} kops/s "
-          f"({r.throughput/base:.0%} of DRAM)")
+for pt in sweep_latency(SimConfig(P=10), src, [0.1 * US, 5 * US], n_ops=4000):
+    base = base or pt.throughput
+    print(f"  L={pt.L_mem / US:.1f}us: {pt.throughput / 1e3:7.1f} kops/s "
+          f"({pt.throughput / base:.0%} of DRAM)")
 
 print("O4: a real engine (tree index + SSD values), model vs 'measurement':")
 store = TreeIndexStore(100_000, seed=1)
 wl = workloads.uniform(100_000, 30_000, (1, 0), seed=2)
-tr = run_trace(store, wl)
+tr = run_trace(store, wl)           # one compiled columnar trace ...
 p = tr.op_params(store.times, P=12, T_sw=0.05 * US)
-src = trace_source(tr.ops)
 print(f"  measured: M={p.M:.1f} hops/op, S={p.S:.2f} IOs/op")
-for L in (0.1, 5.0):
-    r, _ = best_over_threads(SimConfig(L_mem=L * US, P=12), src, 5000)
-    prob = 1 / theta_prob_inv(np.array([L * US]), p)[0]
-    mask = 1 / theta_mask_inv(np.array([L * US]), p)[0]
-    print(f"  L={L}us: sim {r.throughput/1e3:7.1f}k  "
-          f"Theta_prob {prob/1e3:7.1f}k  Theta_mask {mask/1e3:7.1f}k")
+# ... shared by every cell of the latency x threads sweep grid:
+for pt in sweep_latency(SimConfig(P=12), tr.trace, [0.1 * US, 5.0 * US],
+                        n_ops=5000):
+    L = np.array([pt.L_mem])
+    prob = 1 / theta_prob_inv(L, p)[0]
+    mask = 1 / theta_mask_inv(L, p)[0]
+    print(f"  L={pt.L_mem / US:.1f}us: sim {pt.throughput / 1e3:7.1f}k  "
+          f"Theta_prob {prob / 1e3:7.1f}k  Theta_mask {mask / 1e3:7.1f}k")
 
 print("O5 + Sec 5.1: flash-like tail latency (5/14/48us), still near-DRAM:")
-r_dram, _ = best_over_threads(SimConfig(L_mem=0.1 * US, P=12), src, 5000)
-r_tail, _ = best_over_threads(
-    SimConfig(L_mem=FLASH_CXL.latency_spec(), P=12), src, 5000)
-print(f"  DRAM {r_dram.throughput/1e3:.1f}k vs flash-tail "
-      f"{r_tail.throughput/1e3:.1f}k "
-      f"-> degradation {1 - r_tail.throughput/r_dram.throughput:.1%} "
+r_dram, r_tail = sweep_latency(
+    SimConfig(P=12), tr.trace, [0.1 * US, FLASH_CXL.latency_spec()],
+    n_ops=5000)
+print(f"  DRAM {r_dram.throughput / 1e3:.1f}k vs flash-tail "
+      f"{r_tail.throughput / 1e3:.1f}k "
+      f"-> degradation {1 - r_tail.throughput / r_dram.throughput:.1%} "
       f"(paper: 2-19%)")

@@ -15,7 +15,7 @@ from repro.configs import ARCHS, smoke_config
 from repro.core.latency_model import (
     US, PAPER_EXAMPLE, lstar_best, lstar_mem, theta_mask_inv, theta_prob_inv,
 )
-from repro.core.simulator import SimConfig, best_over_threads, microbenchmark_source
+from repro.core.sim import SimConfig, best_over_threads, microbenchmark_source
 from repro.models.layers import init_params
 from repro.train.train_step import TrainHParams, init_train_state, make_train_step
 from repro.zoo import get_api

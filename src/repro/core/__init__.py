@@ -1,7 +1,29 @@
-"""Core of the reproduction: the paper's analytical model, the discrete-event
-simulator standing in for the FPGA testbed, the KV-store engines, and the
-model-driven planner reused by the TPU serving engine."""
-from . import kvstore, latency_model, planner, simulator, tiering, workloads  # noqa: F401
+"""Core of the reproduction, in three layers plus the analytical model:
+
+  * :mod:`repro.core.engines`  -- pluggable KV-store engines (tree index /
+    LSM / two-tier cache) recording columnar suboperation traces
+  * :mod:`repro.core.trace_ir` -- the compiled columnar trace format shared
+    by engines, simulator, model calibration and benchmarks
+  * :mod:`repro.core.sim`      -- the discrete-event simulator standing in
+    for the FPGA testbed, plus the batched latency-sweep pipeline
+  * :mod:`repro.core.latency_model` -- the paper's closed-form models,
+    reused by the planner and the TPU serving engine
+
+``repro.core.kvstore`` and ``repro.core.simulator`` remain as deprecation
+shims over the engines and sim packages.
+"""
+from . import engines, latency_model, planner, sim, tiering, trace_ir, workloads  # noqa: F401
+
+
+def __getattr__(name):
+    # Legacy attribute access (`repro.core.kvstore` / `repro.core.simulator`
+    # after `import repro.core`) keeps working: resolve the deprecation
+    # shims lazily so their DeprecationWarning only fires on actual use.
+    if name in ("kvstore", "simulator"):
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 from .latency_model import (  # noqa: F401
     OpParams,
     SystemParams,
@@ -14,4 +36,12 @@ from .latency_model import (  # noqa: F401
     theta_prob_inv,
     theta_single_inv,
 )
-from .simulator import Op, SimConfig, SimResult, simulate  # noqa: F401
+from .sim import (  # noqa: F401
+    CompiledTrace,
+    Op,
+    SimConfig,
+    SimResult,
+    simulate,
+    simulate_compiled,
+    sweep_latency,
+)

@@ -1,40 +1,41 @@
-"""SSD-based KV-store engines mirroring the paper's three modified stores.
+"""Deprecation shim: the KV engines now live in :mod:`repro.core.engines`.
 
-The paper modifies Aerospike, RocksDB and CacheLib so their large in-memory
-indices/caches live on microsecond-latency memory and every access to them is
-a prefetch+yield. We implement the *data-structure cores* of those three
-designs (Fig. 13) as real Python/numpy structures:
+``repro.core.kvstore`` re-exports the old module's public API so existing
+imports keep working:
 
-  * :class:`TreeIndexStore`   (Aerospike-like)  -- per-sprig binary search
-    trees of 64-byte nodes on slow memory; values on SSD; writes buffered
-    into large flush blocks.
-  * :class:`LSMStore`         (RocksDB-like)    -- sorted-run data blocks on
-    SSD, an LRU block cache on slow memory, fence index + memtable in DRAM,
-    Zipfian access, flush/compaction background writes.
-  * :class:`TwoTierCacheStore` (CacheLib-like)  -- DRAM hash buckets chaining
-    to items + LRU lists on slow memory (tier 1), small-object cache on SSD
-    (tier 2), admission on miss and buffered eviction writes.
+  * the three engines (:class:`TreeIndexStore`, :class:`LSMStore`,
+    :class:`TwoTierCacheStore`) and their :class:`EngineTimes`
+  * the tracing machinery (:class:`Recorder`, :class:`TraceResult`,
+    :func:`run_trace`)
 
-Running a workload produces a **trace**: per-operation suboperation lists
-(`Op`) in which every pointer dereference on slow memory is a MEM subop and
-every SSD access a PREIO/POSTIO pair -- exactly the operation model of
-Sec. 3. The trace is executed by :mod:`repro.core.simulator` to obtain
-throughput vs. memory latency, and summarized into ``OpParams`` so the
-closed-form model of :mod:`repro.core.latency_model` can be compared against
-the "measurement" (Figs. 11(c)(d)(e)).
-
-Only reads/updates go through the traced path; bulk loading is untraced
-(the paper also measures after load + warm-up).
+New code should import from :mod:`repro.core.engines`, which additionally
+provides the :class:`KVEngine` protocol and the engine registry
+(:func:`register_engine` / :func:`get_engine` / :func:`create_engine`).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
 
-import numpy as np
-
-from .latency_model import OpParams, US
-from .simulator import CPU, MEM, POSTIO, PREIO, Op
-from .workloads import Workload
+# The pre-refactor module also exposed these at module level (it imported
+# them for its own use); legacy `from repro.core.kvstore import ...` lines
+# must keep resolving them.
+from .latency_model import OpParams, US  # noqa: F401
+from .trace_ir import CPU, MEM, POSTIO, PREIO, Op  # noqa: F401
+from .workloads import Workload  # noqa: F401
+from .engines import (  # noqa: F401
+    EngineTimes,
+    KVEngine,
+    LSMStore,
+    Recorder,
+    TraceResult,
+    TreeIndexStore,
+    TwoTierCacheStore,
+    available_engines,
+    create_engine,
+    get_engine,
+    register_engine,
+    run_trace,
+)
 
 __all__ = [
     "EngineTimes",
@@ -43,413 +44,11 @@ __all__ = [
     "TreeIndexStore",
     "LSMStore",
     "TwoTierCacheStore",
+    "run_trace",
 ]
 
-
-@dataclass(frozen=True)
-class EngineTimes:
-    """CPU-time constants of one engine's suboperations (calibratable)."""
-
-    t_mem: float = 0.10 * US      # compute attached to one slow-memory hop
-    t_io_pre: float = 1.5 * US    # IO submission (io_uring sqe prep + submit)
-    t_io_post: float = 0.2 * US   # completion check + copy
-    t_probe: float = 0.05 * US    # a DRAM-side probe (hash, fence index)
-    t_value: float = 0.3 * US     # value (de)serialization / checksum
-
-
-class Recorder:
-    """Collects suboperations for the current KV operation."""
-
-    def __init__(self, times: EngineTimes):
-        self.t = times
-        self.ops: list[Op] = []
-        self._cur: list[tuple[int, float]] = []
-        self.n_mem = 0
-        self.n_io = 0
-        self.n_ops = 0
-
-    def mem(self, n: int = 1) -> None:
-        self._cur.extend([(MEM, self.t.t_mem)] * n)
-        self.n_mem += n
-
-    def cpu(self, t: float) -> None:
-        if t > 0.0:
-            self._cur.append((CPU, t))
-
-    def io(self, pre_extra: float = 0.0, post_extra: float = 0.0) -> None:
-        self._cur.append((PREIO, self.t.t_io_pre + pre_extra))
-        self._cur.append((POSTIO, self.t.t_io_post + post_extra))
-        self.n_io += 1
-
-    def end_op(self) -> None:
-        if not self._cur:  # never emit empty ops
-            self._cur.append((CPU, self.t.t_probe))
-        self.ops.append(Op(tuple(self._cur)))
-        self._cur = []
-        self.n_ops += 1
-
-
-@dataclass
-class TraceResult:
-    ops: list[Op]
-    mem_per_op: float             # average slow-memory hops per operation
-    io_per_op: float              # average SSD accesses per operation (S)
-    hit_stats: dict = field(default_factory=dict)
-
-    def op_params(self, times: EngineTimes, P: int, T_sw: float) -> OpParams:
-        """Summarize the trace into the paper's model parameters.
-
-        Calibrated the way the paper does it (Sec. 4.2.3): T_mem / T_io_pre /
-        T_io_post are the mean *CPU spans between yields* measured on the
-        trace -- plain CPU suboperations (hashing, serialization) do not
-        yield, so their time folds into the span of the next yield point.
-        M is memory accesses per *operation*; the theta functions divide
-        by S internally (Sec. 3.2.3 splitting). Ops with no IO (pure
-        cache hits) contribute their hops to the average.
-        """
-        del times  # spans are measured from the trace, not the constants
-        span_sum = {MEM: 0.0, PREIO: 0.0, POSTIO: 0.0}
-        span_n = {MEM: 0, PREIO: 0, POSTIO: 0}
-        pending_cpu = 0.0
-        last_yield: int | None = None
-        for op in self.ops:
-            for kind, dur in op.subops:
-                if kind == CPU:
-                    pending_cpu += dur
-                    continue
-                span_sum[kind] += dur + pending_cpu
-                span_n[kind] += 1
-                pending_cpu = 0.0
-                last_yield = kind
-        if pending_cpu > 0.0 and last_yield is not None:
-            span_sum[last_yield] += pending_cpu
-
-        def mean(kind: int, default: float) -> float:
-            return span_sum[kind] / span_n[kind] if span_n[kind] else default
-
-        S = max(self.io_per_op, 1e-9)
-        return OpParams(
-            M=self.mem_per_op,
-            T_mem=mean(MEM, 0.1 * US),
-            T_io_pre=mean(PREIO, 1.5 * US),
-            T_io_post=mean(POSTIO, 0.2 * US),
-            T_sw=T_sw,
-            P=P,
-            S=S,
-        )
-
-
-# ---------------------------------------------------------------------------
-# Aerospike-like: in-memory tree index, values on SSD
-# ---------------------------------------------------------------------------
-
-class TreeIndexStore:
-    """Per-sprig unbalanced BSTs of 64-byte nodes (Aerospike primary index).
-
-    get  = sprig hash (DRAM) + tree walk (slow-memory hops) + one SSD read.
-    put  = tree walk + write-buffer append; a large flush IO every
-           ``flush_block // value_size`` writes (Aerospike write blocks).
-    """
-
-    def __init__(
-        self,
-        n_keys: int,
-        n_sprigs: int = 256,
-        value_size: int = 1536,
-        flush_block: int = 131072,
-        times: EngineTimes | None = None,
-        seed: int = 0,
-    ):
-        # Aerospike's storage path spends much more CPU per IO than raw
-        # io_uring (network/defrag bookkeeping); the paper's Table 1
-        # example quotes T_io_pre ~ 4 us, T_io_post ~ 3 us for this class.
-        self.times = times or EngineTimes(t_io_pre=3.0 * US, t_io_post=2.0 * US)
-        self.n_keys = n_keys
-        self.n_sprigs = n_sprigs
-        self.value_size = value_size
-        self.flush_every = max(flush_block // value_size, 1)
-        rng = np.random.default_rng(seed)
-        order = rng.permutation(n_keys)
-        # array-based BST per sprig: node i has key keys[i], children l/r
-        self.sprig_of = (
-            (np.arange(n_keys, dtype=np.uint64) * np.uint64(0x9E3779B97F4A7C15))
-            % np.uint64(n_sprigs)
-        ).astype(np.int64)
-        self.root = [-1] * n_sprigs
-        self.key = np.empty(n_keys, dtype=np.int64)
-        self.left = np.full(n_keys, -1, dtype=np.int64)
-        self.right = np.full(n_keys, -1, dtype=np.int64)
-        self.node_of: dict[int, int] = {}
-        self._n_nodes = 0
-        for k in order.tolist():
-            self._insert(int(k))
-        self._pending_writes = 0
-
-    def _insert(self, k: int) -> int:
-        """Untraced build-time insert; returns hop count."""
-        i = self._n_nodes
-        self.key[i] = k
-        self.node_of[k] = i
-        self._n_nodes += 1
-        s = int(self.sprig_of[k])
-        cur = self.root[s]
-        hops = 0
-        if cur < 0:
-            self.root[s] = i
-            return 0
-        while True:
-            hops += 1
-            if k < self.key[cur]:
-                if self.left[cur] < 0:
-                    self.left[cur] = i
-                    return hops
-                cur = self.left[cur]
-            else:
-                if self.right[cur] < 0:
-                    self.right[cur] = i
-                    return hops
-                cur = self.right[cur]
-
-    def _sprig(self, k: int) -> int:
-        # python ints: intentional 64-bit multiplicative hash without
-        # numpy's overflow warning
-        return ((int(k) * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF) % self.n_sprigs
-
-    def _walk(self, k: int, rec: Recorder) -> bool:
-        rec.cpu(self.times.t_probe)  # sprig hash + root lookup (DRAM)
-        cur = self.root[self._sprig(k)]
-        while cur >= 0:
-            rec.mem()  # node is a 64-byte record on slow memory
-            if k == self.key[cur]:
-                return True
-            cur = self.left[cur] if k < self.key[cur] else self.right[cur]
-        return False
-
-    def op(self, k: int, is_write: bool, rec: Recorder) -> None:
-        found = self._walk(k, rec)
-        if is_write:
-            rec.cpu(self.times.t_value)       # serialize into write buffer
-            rec.mem()                          # update index entry in place
-            self._pending_writes += 1
-            if self._pending_writes >= self.flush_every:
-                self._pending_writes = 0
-                rec.io(pre_extra=0.5 * US)     # large-block flush write
-        elif found:
-            rec.io()                           # read value from SSD
-            rec.cpu(self.times.t_value)
-        rec.end_op()
-
-
-# ---------------------------------------------------------------------------
-# RocksDB-like: LSM data blocks on SSD, block cache on slow memory
-# ---------------------------------------------------------------------------
-
-class LSMStore:
-    """Single sorted run partitioned into data blocks + LRU block cache.
-
-    Fence index and memtable stay in DRAM (the paper offloads only the 32-GB
-    block cache, 80% of footprint). A block-cache probe costs hash + LRU
-    hops on slow memory; a hit binary-searches the block's restart points
-    (slow memory); a miss reads the 4-kB block from SSD and installs it.
-    """
-
-    def __init__(
-        self,
-        n_keys: int,
-        entries_per_block: int = 10,       # ~4 kB / 400-B values
-        cache_blocks: int | None = None,   # None: sized for ~67% hit @ Zipf .99
-        restart_interval: int = 16,
-        memtable_ops: int = 4096,
-        times: EngineTimes = EngineTimes(),
-    ):
-        self.times = times
-        self.n_keys = n_keys
-        self.epb = entries_per_block
-        self.n_blocks = (n_keys + entries_per_block - 1) // entries_per_block
-        if cache_blocks is None:
-            cache_blocks = max(self.n_blocks // 12, 1)
-        self.cache_cap = cache_blocks
-        self.restart = restart_interval
-        self.memtable_ops = memtable_ops
-        # LRU block cache: block_id -> tick; plus an eviction clock.
-        from collections import OrderedDict
-
-        self.cache: "OrderedDict[int, None]" = OrderedDict()
-        self._mem_writes = 0
-        self.hits = 0
-        self.lookups = 0
-
-    def _search_block(self, rec: Recorder) -> None:
-        # binary search over restart points, then linear scan inside one
-        # restart interval; every probed key is a slow-memory access.
-        import math
-
-        n_restarts = max(self.epb // self.restart, 1)
-        hops = max(int(math.ceil(math.log2(n_restarts + 1))), 1)
-        hops += min(self.restart, self.epb) // 4  # expected linear-scan touches
-        rec.mem(hops)
-
-    def op(self, k: int, is_write: bool, rec: Recorder) -> None:
-        t = self.times
-        if is_write:
-            rec.cpu(t.t_probe + t.t_value)     # memtable insert (DRAM skiplist)
-            self._mem_writes += 1
-            if self._mem_writes >= self.memtable_ops:
-                self._mem_writes = 0
-                # flush: one large sequential write + compaction read+write
-                rec.io(pre_extra=1.0 * US)
-                rec.io(pre_extra=1.0 * US)
-                rec.cpu(20.0 * US)             # compaction merge CPU burst
-            rec.end_op()
-            return
-        rec.cpu(t.t_probe)                     # memtable probe (DRAM)
-        rec.cpu(t.t_probe)                     # fence-index binary search (DRAM)
-        block = int(k) // self.epb
-        self.lookups += 1
-        rec.mem()                              # cache hash-bucket probe
-        if block in self.cache:
-            self.hits += 1
-            self.cache.move_to_end(block)
-            rec.mem(2)                         # LRU unlink/relink touches
-        else:
-            rec.io()                           # read 4-kB data block
-            rec.cpu(t.t_value)                 # checksum + decode
-            self.cache[block] = None
-            rec.mem(2)                         # insert into hash + LRU head
-            if len(self.cache) > self.cache_cap:
-                self.cache.popitem(last=False)
-                rec.mem(2)                     # evict tail: unlink + hash del
-        self._search_block(rec)
-        rec.cpu(t.t_value)
-        rec.end_op()
-
-    @property
-    def hit_ratio(self) -> float:
-        return self.hits / max(self.lookups, 1)
-
-
-# ---------------------------------------------------------------------------
-# CacheLib-like: two-tier cache, chained items + LRU on slow memory
-# ---------------------------------------------------------------------------
-
-class TwoTierCacheStore:
-    """Tier-1: DRAM hash buckets -> item chains + LRU list on slow memory.
-    Tier-2: SSD small-object cache. Misses fetch from the backing store
-    (CPU-modelled) and admit into tier 1, evicting to tier 2.
-    """
-
-    def __init__(
-        self,
-        n_keys: int,
-        tier1_items: int | None = None,    # None: ~8% of keys (8 GB / 100 M)
-        tier2_items: int | None = None,    # None: ~32% of keys
-        avg_chain: float = 1.5,
-        times: EngineTimes = EngineTimes(),
-        seed: int = 0,
-    ):
-        from collections import OrderedDict
-
-        self.times = times
-        self.n_keys = n_keys
-        self.t1_cap = tier1_items if tier1_items is not None else max(n_keys // 12, 1)
-        self.t2_cap = tier2_items if tier2_items is not None else max(n_keys // 3, 1)
-        self.avg_chain = avg_chain
-        self.t1: "OrderedDict[int, None]" = OrderedDict()
-        self.t2: "OrderedDict[int, None]" = OrderedDict()
-        self.rng = np.random.default_rng(seed)
-        self.t1_hits = 0
-        self.t2_hits = 0
-        self.t2_lookups = 0
-        self.gets = 0
-        self._evict_buffer = 0
-        self._flush_every = 16                 # buffered tier-2 region writes
-
-    def _chain_walk(self, rec: Recorder, found: bool) -> None:
-        # hash bucket is DRAM; each chained item is a slow-memory node
-        rec.cpu(self.times.t_probe)
-        hops = 1 + self.rng.poisson(max(self.avg_chain - 1.0, 0.0))
-        if not found:
-            hops = max(hops - 1, 1)
-        rec.mem(int(hops))
-
-    def _admit(self, k: int, rec: Recorder) -> None:
-        self.t1[k] = None
-        rec.mem(2)                             # alloc item + chain-head insert
-        if len(self.t1) > self.t1_cap:
-            victim, _ = self.t1.popitem(last=False)
-            rec.mem(3)                         # LRU tail unlink + chain del
-            self.t2[victim] = None
-            self._evict_buffer += 1
-            if self._evict_buffer >= self._flush_every:
-                self._evict_buffer = 0
-                rec.io(pre_extra=0.5 * US)     # flush a tier-2 region write
-            if len(self.t2) > self.t2_cap:
-                self.t2.popitem(last=False)
-
-    def op(self, k: int, is_write: bool, rec: Recorder) -> None:
-        t = self.times
-        if is_write:
-            if k in self.t1:
-                self._chain_walk(rec, True)
-                self.t1.move_to_end(k)
-                rec.mem(3)                     # LRU promote
-                rec.cpu(t.t_value)
-            else:
-                self._chain_walk(rec, False)
-                rec.cpu(t.t_value)
-                self._admit(k, rec)
-            rec.end_op()
-            return
-        self.gets += 1
-        if k in self.t1:
-            self.t1_hits += 1
-            self._chain_walk(rec, True)
-            self.t1.move_to_end(k)
-            rec.mem(3)                         # LRU promote
-            rec.cpu(t.t_value)
-            rec.end_op()
-            return
-        self._chain_walk(rec, False)
-        self.t2_lookups += 1
-        rec.io()                               # tier-2 SOC bucket read
-        if k in self.t2:
-            self.t2_hits += 1
-            self.t2.move_to_end(k)
-            rec.cpu(t.t_value)
-        else:
-            rec.cpu(2.0 * US)                  # backing-store fetch + build
-        self._admit(k, rec)
-        rec.end_op()
-
-    @property
-    def hit_stats(self) -> dict:
-        t1 = self.t1_hits / max(self.gets, 1)
-        t2 = self.t2_hits / max(self.t2_lookups, 1)
-        return {"tier1": t1, "tier2": t2, "overall": t1 + (1 - t1) * t2}
-
-
-# ---------------------------------------------------------------------------
-# Tracing driver
-# ---------------------------------------------------------------------------
-
-def run_trace(store, wl: Workload, warmup_frac: float = 0.3) -> TraceResult:
-    """Run a workload through an engine, recording only the post-warm-up ops."""
-    n_warm = int(len(wl) * warmup_frac)
-    warm_rec = Recorder(store.times)
-    rec = Recorder(store.times)
-    for i, (k, w) in enumerate(wl.pairs()):
-        store.op(int(k), bool(w), warm_rec if i < n_warm else rec)
-        if i < n_warm:
-            # discard warm-up subops to bound memory
-            warm_rec.ops.clear()
-    hit_stats = {}
-    if isinstance(store, LSMStore):
-        hit_stats = {"block_cache": store.hit_ratio}
-    elif isinstance(store, TwoTierCacheStore):
-        hit_stats = store.hit_stats
-    return TraceResult(
-        ops=rec.ops,
-        mem_per_op=rec.n_mem / max(rec.n_ops, 1),
-        io_per_op=rec.n_io / max(rec.n_ops, 1),
-        hit_stats=hit_stats,
-    )
+warnings.warn(
+    "repro.core.kvstore is deprecated; import from repro.core.engines instead",
+    DeprecationWarning,
+    stacklevel=2,
+)

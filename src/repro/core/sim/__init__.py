@@ -1,0 +1,57 @@
+"""Discrete-event simulation of the paper's execution model (the "FPGA
+testbed"), as a layered package:
+
+  * :mod:`.config`      -- :class:`SimConfig` / :class:`SimResult`
+  * :mod:`.devices`     -- memory-latency sampling, SSD token clocks,
+                           per-core prefetch queue + bandwidth throttle
+  * :mod:`.scheduler`   -- threads, cores, FIFO ready rings, parked heap
+  * :mod:`.engine_loop` -- the generic event loop and the compiled
+                           single-core fast loop over columnar traces
+  * :mod:`.sweep`       -- the batched latency x threads sweep pipeline
+
+The paper measures KV-operation throughput on real hardware whose memory
+latency is made adjustable by an FPGA CXL board.  This container has no
+such hardware, so we reproduce the *measurement apparatus* in virtual time
+with exactly the paper's free parameters: N threads per core with strict
+FIFO scheduling and per-yield context-switch cost T_sw, software prefetch
+with per-core queue depth P, stall-on-incomplete-prefetch (the gray bars of
+Figs. 5 and 8), asynchronous IO gated by shared SSD bandwidth/IOPS token
+clocks, memory-bandwidth throttling, DRAM tiering, premature eviction,
+tail-latency mixtures, and a global per-op critical section.
+
+Operations come from an ``OpSource`` callable (microbenchmark or legacy
+trace replay) or, on the fast path, from a columnar
+:class:`~repro.core.trace_ir.CompiledTrace` recorded by the engines in
+:mod:`repro.core.engines`.
+"""
+from ..trace_ir import CPU, MEM, POSTIO, PREIO, US, CompiledTrace, Op  # noqa: F401
+from .config import SimConfig, SimResult  # noqa: F401
+from .devices import PrefetchUnit, SSDClocks, sample_lmem  # noqa: F401
+from .engine_loop import (  # noqa: F401
+    best_over_threads,
+    microbenchmark_source,
+    simulate,
+    simulate_compiled,
+    trace_source,
+)
+from .scheduler import Core, ParkedHeap, Thread  # noqa: F401
+from .sweep import SweepPoint, sweep_latency  # noqa: F401
+
+__all__ = [
+    "US",
+    "MEM",
+    "PREIO",
+    "POSTIO",
+    "CPU",
+    "Op",
+    "CompiledTrace",
+    "SimConfig",
+    "SimResult",
+    "simulate",
+    "simulate_compiled",
+    "microbenchmark_source",
+    "trace_source",
+    "best_over_threads",
+    "sweep_latency",
+    "SweepPoint",
+]

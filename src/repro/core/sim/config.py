@@ -1,0 +1,57 @@
+"""Simulation configuration and result types (the paper's free parameters)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from ..trace_ir import US
+
+__all__ = ["US", "DEFAULT_THREAD_CANDIDATES", "SimConfig", "SimResult"]
+
+# The thread counts tried when optimizing per latency point -- shared by the
+# legacy best_over_threads protocol and the batched sweep pipeline so the
+# two always search the same grid.
+DEFAULT_THREAD_CANDIDATES = (8, 16, 24, 32, 48, 64, 96, 128)
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    # Core/thread structure
+    n_threads: int = 48
+    n_cores: int = 1
+    T_sw: float = 0.05 * US
+    # Prefetch path
+    P: int = 12
+    L_mem: float | Sequence[tuple[float, float]] = 5.0 * US  # scalar or [(lat, prob)]
+    rho: float = 1.0
+    L_dram: float = 0.1 * US
+    eps: float = 0.0
+    A_mem: float = 64.0
+    B_mem: float = 0.0            # bytes/sec; 0 disables the throttle
+    # IO path
+    L_io: float = 80.0 * US
+    L_io_jitter: float = 0.25     # uniform +-fraction of L_io (real SSDs jitter;
+                                  # this is what naturally misaligns threads,
+                                  # Sec. 3.2.2 "timing ... will be mostly random")
+    A_io: float = 1024.0
+    B_io: float = 0.0             # 0 disables
+    R_io: float = 0.0             # 0 disables
+    # Contention
+    T_lock: float = 0.0
+    seed: int = 0
+    collect_load_hist: bool = False
+
+
+@dataclass
+class SimResult:
+    ops: int
+    time: float                     # virtual seconds elapsed
+    throughput: float               # ops/sec
+    mem_stall_total: float          # total prefetch-wait (gray-bar) seconds
+    mem_accesses: int
+    op_latencies: list[float] = field(default_factory=list)
+    load_stalls: list[float] = field(default_factory=list)  # Fig. 10 histogram
+
+    @property
+    def mean_op_latency(self) -> float:
+        return sum(self.op_latencies) / max(len(self.op_latencies), 1)

@@ -1,0 +1,93 @@
+"""Device models: memory-latency sampling, SSD token clocks, prefetch queue.
+
+These encapsulate all *device* state of the simulation -- everything that is
+not thread scheduling.  The generic event loop and the compiled fast loop in
+:mod:`.engine_loop` both build on them; arithmetic and RNG draw order are
+kept byte-identical between the two paths so results are reproducible across
+refactors.
+"""
+from __future__ import annotations
+
+import heapq
+import random
+
+from .config import SimConfig
+
+__all__ = ["sample_lmem", "SSDClocks", "PrefetchUnit"]
+
+
+def sample_lmem(cfg: SimConfig, rng: random.Random) -> float:
+    """One memory-load latency: DRAM-tier short-circuit, scalar, or mixture."""
+    if cfg.rho < 1.0 and rng.random() >= cfg.rho:
+        return cfg.L_dram
+    lm = cfg.L_mem
+    if isinstance(lm, (int, float)):
+        return float(lm)
+    u = rng.random()
+    acc = 0.0
+    for lat, prob in lm:
+        acc += prob
+        if u < acc:
+            return lat
+    return lm[-1][0]
+
+
+class SSDClocks:
+    """Shared (cross-core) SSD gating: IOPS and bandwidth token clocks plus
+    per-IO latency jitter.  ``submit`` returns the completion time of an IO
+    submitted at ``now``."""
+
+    __slots__ = ("R_io", "B_io", "A_io", "L_io", "jitter", "tok_next", "bw_next")
+
+    def __init__(self, cfg: SimConfig):
+        self.R_io = cfg.R_io
+        self.B_io = cfg.B_io
+        self.A_io = cfg.A_io
+        self.L_io = cfg.L_io
+        self.jitter = cfg.L_io_jitter
+        self.tok_next = 0.0
+        self.bw_next = 0.0
+
+    def submit(self, now: float, rng: random.Random) -> float:
+        svc = now
+        if self.R_io > 0.0:
+            svc = max(svc, self.tok_next)
+            self.tok_next = svc + 1.0 / self.R_io
+        if self.B_io > 0.0:
+            svc = max(svc, self.bw_next)
+            self.bw_next = svc + self.A_io / self.B_io
+        lat_io = self.L_io
+        if self.jitter > 0.0:
+            lat_io *= 1.0 + self.jitter * (2.0 * rng.random() - 1.0)
+        return svc + lat_io
+
+
+class PrefetchUnit:
+    """Per-core software-prefetch state: an in-flight completion heap bounded
+    by queue depth P, plus the memory-bandwidth throttle spacing prefetch
+    starts (A_mem/B_mem)."""
+
+    __slots__ = ("inflight", "bw_next")
+
+    def __init__(self):
+        self.inflight: list[float] = []   # heap of completion times
+        self.bw_next = 0.0
+
+    def issue(self, now: float, cfg: SimConfig, rng: random.Random) -> float:
+        """Issue a prefetch at ``now``; returns its completion time.
+
+        If P slots are all in flight the start is delayed until the earliest
+        one completes (Fig. 5); the bandwidth throttle can delay it further.
+        """
+        pq = self.inflight
+        while pq and pq[0] <= now:
+            heapq.heappop(pq)
+        start = now if len(pq) < cfg.P else max(now, pq[0])
+        if cfg.B_mem > 0.0:
+            start = max(start, self.bw_next)
+            self.bw_next = start + cfg.A_mem / cfg.B_mem
+        comp = start + sample_lmem(cfg, rng)
+        if len(pq) >= cfg.P:
+            heapq.heappop(pq)
+        heapq.heappush(pq, comp)
+        return comp

@@ -1,0 +1,449 @@
+"""The discrete-event loops executing operations on the simulated machine.
+
+Two implementations of the same execution model:
+
+  * :func:`simulate` -- the generic loop.  Takes any ``op_source`` callable,
+    supports multi-core, and composes the :mod:`.scheduler` and
+    :mod:`.devices` layers.  This is the reference semantics.
+  * :func:`simulate_compiled` -- the fast path.  Takes a columnar
+    :class:`~repro.core.trace_ir.CompiledTrace`, specializes the single-core
+    case into one tight loop over flat Python lists (no per-op tuple churn,
+    no core heap, inlined scalar latency sampling), and reproduces the
+    generic loop's RNG draw order exactly, so its results are bit-identical
+    to ``simulate(cfg, trace_source(trace.to_ops()), ...)`` while running
+    several times faster.  Multi-core configs transparently fall back to the
+    generic loop.
+
+Everything is virtual-time; wall-clock speed is irrelevant to fidelity.
+"""
+from __future__ import annotations
+
+import heapq
+import random
+from collections import deque
+from dataclasses import replace
+from typing import Callable, Iterable, Sequence
+
+from ..trace_ir import CPU, MEM, POSTIO, PREIO, CompiledTrace, Op
+from .config import DEFAULT_THREAD_CANDIDATES, SimConfig, SimResult
+from .devices import SSDClocks, sample_lmem
+from .scheduler import Core, ParkedHeap, Thread
+
+__all__ = [
+    "simulate",
+    "simulate_compiled",
+    "microbenchmark_source",
+    "trace_source",
+    "best_over_threads",
+]
+
+
+def microbenchmark_source(
+    M: int,
+    T_mem: float,
+    T_io_pre: float,
+    T_io_post: float,
+    n_io: int = 1,
+) -> Callable[[random.Random], Op]:
+    """The Sec. 4.1 microbenchmark: M pointer-chase accesses then one IO."""
+    per_io = [(MEM, T_mem)] * (M // max(n_io, 1))
+    sub: list[tuple[int, float]] = []
+    if n_io == 0:
+        sub = [(MEM, T_mem)] * M
+    else:
+        for _ in range(n_io):
+            sub += per_io + [(PREIO, T_io_pre), (POSTIO, T_io_post)]
+    op = Op(tuple(sub))
+    return lambda rng: op
+
+
+def trace_source(ops: Sequence[Op]) -> Callable[[random.Random], Op]:
+    """Replay measured traversal traces (from the KV engines), cyclically
+    but starting each thread at a random offset so traces interleave."""
+    n = len(ops)
+
+    def src(rng: random.Random, _state={}) -> Op:
+        i = _state.setdefault("i", rng.randrange(n))
+        _state["i"] = (i + 1) % n
+        return ops[i]
+
+    return src
+
+
+def simulate(
+    cfg: SimConfig,
+    op_source: Callable[[random.Random], Op],
+    n_ops: int,
+    warmup_ops: int | None = None,
+    collect_latency: bool = False,
+) -> SimResult:
+    """Run the event simulation until ``n_ops`` operations complete.
+
+    ``warmup_ops`` (default: 2 ops per thread) are excluded from throughput
+    so the pipeline fill does not bias short runs.
+    """
+    rng = random.Random(cfg.seed)
+    total_threads = cfg.n_threads * cfg.n_cores
+    if warmup_ops is None:
+        warmup_ops = 2 * total_threads
+
+    cores = [Core() for _ in range(cfg.n_cores)]
+    ssd = SSDClocks(cfg)
+    lock_next = 0.0
+
+    parked = ParkedHeap()
+
+    def start_op(th: Thread, now: float) -> None:
+        op = op_source(rng)
+        th.subops = op.subops
+        th.idx = 0
+        th.op_start = now
+
+    for cid, core in enumerate(cores):
+        for t in range(cfg.n_threads):
+            th = Thread(cid * cfg.n_threads + t)
+            start_op(th, 0.0)
+            # The first MEM access of the very first op: treat its prefetch
+            # as issued at a random phase before t=0 (threads never start in
+            # lockstep on real hardware), so the warm-up does not seed the
+            # pathological aligned schedule of Fig. 7(a).
+            th.pf_ready = rng.random() * sample_lmem(cfg, rng)
+            core.ready.append(th)
+
+    done = 0
+    counted = 0
+    t_start_measure = None
+    mem_stall = 0.0
+    mem_accesses = 0
+    op_lat: list[float] = []
+    stalls: list[float] = []
+    hist = cfg.collect_load_hist
+
+    # Event loop over cores ordered by their local clocks.
+    core_heap = [(0.0, cid) for cid in range(cfg.n_cores)]
+    heapq.heapify(core_heap)
+
+    measuring = lambda: done >= warmup_ops  # noqa: E731
+
+    while counted < n_ops:
+        # Wake any parked threads whose IO completed before the earliest
+        # core time (they rejoin their core's ready ring).
+        parked.wake_until(core_heap[0][0], cores)
+
+        t_core, cid = heapq.heappop(core_heap)
+        core = cores[cid]
+        core.now = max(core.now, t_core)
+
+        if not core.ready:
+            # Idle until this core's earliest parked thread wakes (or any
+            # parked thread if the core has none -- then just re-arm later).
+            wake = parked.earliest_for(cid)
+            if wake is None:
+                if parked:
+                    heapq.heappush(core_heap, (parked.next_wake(), cid))
+                # else: deadlock cannot happen (some thread always runnable)
+                continue
+            core.now = max(core.now, wake)
+            parked.wake_until(core.now, cores)
+            if not core.ready:
+                heapq.heappush(core_heap, (core.now + 1e-9, cid))
+                continue
+
+        th = core.ready.popleft()
+        kind, dur = th.subops[th.idx]
+        now = core.now
+
+        if kind == MEM:
+            if cfg.eps > 0.0 and rng.random() < cfg.eps:
+                ready_at = now + sample_lmem(cfg, rng)  # premature eviction
+            else:
+                ready_at = th.pf_ready
+            stall = ready_at - now
+            if stall > 0.0:
+                if measuring():
+                    mem_stall += stall
+                now = ready_at
+            if hist and measuring():
+                stalls.append(max(stall, 0.0))
+            if measuring():
+                mem_accesses += 1
+            now += dur
+        else:  # PREIO / POSTIO / CPU all just burn their CPU time here
+            now += dur
+
+        th.idx += 1
+        end_of_op = th.idx >= len(th.subops)
+
+        if end_of_op:
+            done += 1
+            if measuring():
+                if t_start_measure is None:
+                    t_start_measure = now
+                counted += 1
+                if collect_latency:
+                    op_lat.append(now - th.op_start)
+            start_op(th, now)
+            if cfg.T_lock > 0.0:
+                start = max(now, lock_next)
+                now = start + cfg.T_lock
+                lock_next = now
+
+        nkind = th.subops[th.idx][0]
+        park_until = None
+
+        if kind == PREIO and not end_of_op:
+            # Submit the IO now; completion is gated by the shared SSD clocks.
+            park_until = ssd.submit(now, rng)
+
+        if nkind == MEM:
+            # Issue the prefetch for the next access (pointer now known).
+            th.pf_ready = core.prefetch.issue(now, cfg, rng)
+
+        now += cfg.T_sw  # one context switch per suboperation (yield)
+        core.now = now
+
+        if park_until is not None:
+            parked.park(max(park_until, now), cid, th)
+        else:
+            core.ready.append(th)
+        heapq.heappush(core_heap, (core.now, cid))
+
+    t0 = t_start_measure if t_start_measure is not None else 0.0
+    t_end = max(c.now for c in cores)
+    elapsed = max(t_end - t0, 1e-12)
+    return SimResult(
+        ops=counted,
+        time=elapsed,
+        throughput=counted / elapsed,
+        mem_stall_total=mem_stall,
+        mem_accesses=mem_accesses,
+        op_latencies=op_lat,
+        load_stalls=stalls,
+    )
+
+
+def simulate_compiled(
+    cfg: SimConfig,
+    trace: CompiledTrace,
+    n_ops: int,
+    warmup_ops: int | None = None,
+    collect_latency: bool = False,
+) -> SimResult:
+    """Fast replay of a :class:`CompiledTrace` (bit-identical to the generic
+    loop over ``trace_source(trace.to_ops())``; see module docstring).
+
+    The specialization covers the single-core case with all device features
+    (eps, rho, latency mixtures, SSD clocks, memory throttle, T_lock);
+    multi-core configs fall back to :func:`simulate`.
+    """
+    if cfg.n_cores != 1:
+        return simulate(cfg, trace.as_source(), n_ops, warmup_ops,
+                        collect_latency)
+
+    rng = random.Random(cfg.seed)
+    rrandom = rng.random
+    rrandrange = rng.randrange
+    if warmup_ops is None:
+        warmup_ops = 2 * cfg.n_threads
+
+    kinds, durs, op_starts, op_ends = trace.as_lists()
+    n_trace = trace.n_ops
+
+    # Hoist config into locals (attribute loads dominate the interpreted
+    # inner loop otherwise).
+    P = cfg.P
+    T_sw = cfg.T_sw
+    T_lock = cfg.T_lock
+    eps = cfg.eps
+    L_io = cfg.L_io
+    jitter = cfg.L_io_jitter
+    R_io = cfg.R_io
+    B_io = cfg.B_io
+    A_io = cfg.A_io
+    B_mem = cfg.B_mem
+    A_mem = cfg.A_mem
+    hist = cfg.collect_load_hist
+
+    simple_mem = cfg.rho >= 1.0 and isinstance(cfg.L_mem, (int, float))
+    lmem_scalar = float(cfg.L_mem) if simple_mem else 0.0
+
+    def sample() -> float:
+        # Same draw order as devices.sample_lmem (used on the slow paths).
+        return sample_lmem(cfg, rng)
+
+    # Trace cursor, replicating trace_source exactly: one randrange is drawn
+    # per fetch (the legacy closure evaluates it as a setdefault argument),
+    # only the first draw picks the starting offset.
+    cursor = -1
+
+    n_threads = cfg.n_threads
+    t_idx = [0] * n_threads        # current flat subop index
+    t_end = [0] * n_threads        # flat end index of the current op
+    t_pf = [0.0] * n_threads       # prefetch completion for subops[idx]
+    t_opstart = [0.0] * n_threads
+
+    ready: deque[int] = deque()     # FIFO ring of tids
+    for tid in range(n_threads):
+        j = rrandrange(n_trace)
+        if cursor < 0:
+            cursor = j
+        t_idx[tid] = op_starts[cursor]
+        t_end[tid] = op_ends[cursor]
+        cursor = (cursor + 1) % n_trace
+        t_pf[tid] = rrandom() * (lmem_scalar if simple_mem else sample())
+        ready.append(tid)
+    ready_pop = ready.popleft
+    ready_push = ready.append
+
+    parked: list[tuple[float, int, int]] = []   # (wake, seq, tid)
+    seq = 0
+    heappush = heapq.heappush
+    heappop = heapq.heappop
+
+    pf_inflight: list[float] = []   # the single core's prefetch heap
+    pf_bw_next = 0.0
+    io_tok_next = 0.0
+    io_bw_next = 0.0
+    lock_next = 0.0
+
+    done = 0
+    counted = 0
+    t_start_measure = None
+    mem_stall = 0.0
+    mem_accesses = 0
+    op_lat: list[float] = []
+    stalls: list[float] = []
+    measuring = warmup_ops <= 0
+
+    now = 0.0
+    while counted < n_ops:
+        while parked and parked[0][0] <= now:
+            ready_push(heappop(parked)[2])
+        if not ready:
+            # All threads parked on IO: idle-skip to the earliest wake.
+            wake = parked[0][0]
+            if wake > now:
+                now = wake
+            while parked and parked[0][0] <= now:
+                ready_push(heappop(parked)[2])
+
+        tid = ready_pop()
+        i = t_idx[tid]
+        kind = kinds[i]
+        dur = durs[i]
+
+        if kind == 0:  # MEM
+            if eps > 0.0 and rrandom() < eps:
+                ready_at = now + (lmem_scalar if simple_mem else sample())
+            else:
+                ready_at = t_pf[tid]
+            stall = ready_at - now
+            if stall > 0.0:
+                if measuring:
+                    mem_stall += stall
+                now = ready_at
+            if measuring:
+                if hist:
+                    stalls.append(stall if stall > 0.0 else 0.0)
+                mem_accesses += 1
+            now += dur
+        else:
+            now += dur
+
+        i += 1
+        end_of_op = i >= t_end[tid]
+
+        if end_of_op:
+            done += 1
+            if done >= warmup_ops:
+                measuring = True
+                if t_start_measure is None:
+                    t_start_measure = now
+                counted += 1
+                if collect_latency:
+                    op_lat.append(now - t_opstart[tid])
+            # Start the next op from the shared cyclic cursor.  The
+            # rrandrange draw is discarded on purpose: the legacy
+            # trace_source evaluates one per fetch (setdefault argument),
+            # and keeping the RNG stream identical keeps results
+            # bit-identical to the generic loop.
+            rrandrange(n_trace)
+            i = op_starts[cursor]
+            t_end[tid] = op_ends[cursor]
+            cursor = (cursor + 1) % n_trace
+            t_opstart[tid] = now
+            if T_lock > 0.0:
+                start = now if now > lock_next else lock_next
+                now = start + T_lock
+                lock_next = now
+
+        park_until = None
+        if kind == 1 and not end_of_op:  # PREIO: submit the IO now
+            svc = now
+            if R_io > 0.0:
+                if io_tok_next > svc:
+                    svc = io_tok_next
+                io_tok_next = svc + 1.0 / R_io
+            if B_io > 0.0:
+                if io_bw_next > svc:
+                    svc = io_bw_next
+                io_bw_next = svc + A_io / B_io
+            lat_io = L_io
+            if jitter > 0.0:
+                lat_io *= 1.0 + jitter * (2.0 * rrandom() - 1.0)
+            park_until = svc + lat_io
+
+        if kinds[i] == 0:  # next subop is MEM: issue its prefetch now
+            pq = pf_inflight
+            while pq and pq[0] <= now:
+                heappop(pq)
+            if len(pq) < P:
+                start = now
+            else:
+                start = now if now > pq[0] else pq[0]
+            if B_mem > 0.0:
+                if pf_bw_next > start:
+                    start = pf_bw_next
+                pf_bw_next = start + A_mem / B_mem
+            comp = start + (lmem_scalar if simple_mem else sample())
+            if len(pq) >= P:
+                heappop(pq)
+            heappush(pq, comp)
+            t_pf[tid] = comp
+
+        now += T_sw
+        t_idx[tid] = i
+
+        if park_until is not None:
+            seq += 1
+            heappush(parked, (park_until if park_until > now else now, seq, tid))
+        else:
+            ready_push(tid)
+
+    t0 = t_start_measure if t_start_measure is not None else 0.0
+    elapsed = max(now - t0, 1e-12)
+    return SimResult(
+        ops=counted,
+        time=elapsed,
+        throughput=counted / elapsed,
+        mem_stall_total=mem_stall,
+        mem_accesses=mem_accesses,
+        op_latencies=op_lat,
+        load_stalls=stalls,
+    )
+
+
+def best_over_threads(
+    cfg: SimConfig,
+    op_source: Callable[[random.Random], Op],
+    n_ops: int,
+    candidates: Iterable[int] = DEFAULT_THREAD_CANDIDATES,
+) -> tuple[SimResult, int]:
+    """The paper's protocol: per latency point, optimize the thread count."""
+    best: tuple[SimResult, int] | None = None
+    for n in candidates:
+        r = simulate(replace(cfg, n_threads=n), op_source, n_ops)
+        if best is None or r.throughput > best[0].throughput:
+            best = (r, n)
+    assert best is not None
+    return best

@@ -1,0 +1,272 @@
+"""Batched latency sweeps: the paper's measurement protocol as one fast call.
+
+The headline artifact of the paper (Figs. 9-11) is throughput vs. memory
+latency with the thread count re-optimized at every latency point.  The
+legacy way to produce it was a Python loop calling ``best_over_threads``
+per point over a row-oriented tuple trace -- re-paying interpreter overhead
+for every cell of the latency x threads grid.
+
+:func:`sweep_latency` runs the whole grid through the compiled fast loop
+(:func:`~repro.core.sim.engine_loop.simulate_compiled`) against **one**
+shared :class:`~repro.core.trace_ir.CompiledTrace`, optionally fans the
+cells out over worker processes (fork start method; the trace is inherited,
+never pickled per task), and can memoize finished cells in a small on-disk
+cache so repeated benchmark runs are incremental.
+
+Each grid cell is seeded exactly like the legacy protocol
+(``replace(cfg, L_mem=L, n_threads=n)`` with the same ``cfg.seed``), so
+per-point throughput matches the legacy event loop; see
+``tests/test_sweep.py`` for the equivalence guarantees.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import multiprocessing as mp
+import os
+import sys
+from dataclasses import dataclass, replace
+from typing import Callable, Iterable, Sequence
+
+from ..trace_ir import CompiledTrace, Op
+from .config import DEFAULT_THREAD_CANDIDATES, SimConfig, SimResult
+from .engine_loop import simulate, simulate_compiled
+
+__all__ = ["SweepPoint", "sweep_latency"]
+
+
+@dataclass
+class SweepPoint:
+    """Best operating point at one memory latency."""
+
+    L_mem: float | Sequence[tuple[float, float]]
+    n_threads: int                 # best thread count at this latency
+    result: SimResult              # the winning simulation
+    per_thread: dict[int, float]   # throughput of every candidate
+
+    @property
+    def throughput(self) -> float:
+        return self.result.throughput
+
+
+def _coerce_trace(source) -> tuple[CompiledTrace | None, Callable | None]:
+    """Accept CompiledTrace / TraceResult / list[Op] / legacy callable."""
+    if isinstance(source, CompiledTrace):
+        return source, None
+    trace = getattr(source, "trace", None)   # TraceResult duck-type
+    if isinstance(trace, CompiledTrace):
+        return trace, None
+    if isinstance(source, (list, tuple)):
+        if not source:
+            raise ValueError("cannot sweep an empty op list")
+        if isinstance(source[0], Op):
+            return CompiledTrace.from_ops(source), None
+    if callable(source):
+        return None, source
+    raise TypeError(
+        "source must be a CompiledTrace, TraceResult, list[Op], or an "
+        f"op-source callable, not {type(source).__name__}"
+    )
+
+
+def _run_cell(cfg: SimConfig, trace, src_fn, n_ops: int,
+              warmup_ops: int | None) -> SimResult:
+    if trace is not None:
+        return simulate_compiled(cfg, trace, n_ops, warmup_ops)
+    return simulate(cfg, src_fn, n_ops, warmup_ops)
+
+
+# -- worker-process plumbing -------------------------------------------------
+
+_WORKER_STATE: dict = {}
+
+
+def _worker_init(trace, src_fn, n_ops, warmup_ops):
+    _WORKER_STATE["args"] = (trace, src_fn, n_ops, warmup_ops)
+    if trace is not None:
+        trace.as_lists()   # pay the one-time columnar->list cost per worker
+
+
+def _worker_run(cfg: SimConfig) -> SimResult:
+    trace, src_fn, n_ops, warmup_ops = _WORKER_STATE["args"]
+    return _run_cell(cfg, trace, src_fn, n_ops, warmup_ops)
+
+
+def _pick_context(trace, src_fn):
+    """Choose a start method that is both fast and fork-safe.
+
+    * ``fork`` is the fast path: the trace (or a stateless source callable)
+      is inherited by the workers, nothing is pickled per task.  It is only
+      safe while the parent has no thread pools -- jax famously deadlocks
+      forked children -- so it is used only when jax is not loaded.
+    * ``forkserver`` sidesteps that (workers fork from a clean server
+      process) at the cost of pickling the initargs, so it needs a
+      picklable trace; the server preloads this module so workers do not
+      re-import numpy/repro per pool.
+    * Otherwise: run serial.
+    """
+    methods = mp.get_all_start_methods()
+    if "fork" in methods and "jax" not in sys.modules:
+        return mp.get_context("fork")
+    if "forkserver" in methods and trace is not None and src_fn is None:
+        ctx = mp.get_context("forkserver")
+        try:
+            ctx.set_forkserver_preload(["repro.core.sim.sweep"])
+        except Exception:  # pragma: no cover - preload is best-effort
+            pass
+        return ctx
+    return None
+
+
+# -- on-disk cell cache ------------------------------------------------------
+
+_CACHED_FIELDS = ("ops", "time", "throughput", "mem_stall_total",
+                  "mem_accesses")
+
+
+def _cache_key(cfg: SimConfig, trace_digest: str, n_ops: int,
+               warmup_ops) -> str:
+    blob = json.dumps(
+        [repr(cfg), trace_digest, n_ops, warmup_ops], sort_keys=True
+    ).encode()
+    return hashlib.sha1(blob).hexdigest()
+
+
+def _cache_load(path: str) -> SimResult | None:
+    try:
+        with open(path) as f:
+            d = json.load(f)
+        return SimResult(**{k: d[k] for k in _CACHED_FIELDS})
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+
+
+def _cache_store(path: str, r: SimResult) -> None:
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump({k: getattr(r, k) for k in _CACHED_FIELDS}, f)
+        os.replace(tmp, path)
+    except OSError:
+        pass
+
+
+def sweep_latency(
+    cfg: SimConfig,
+    source,
+    latencies: Iterable,
+    thread_candidates: Iterable[int] = DEFAULT_THREAD_CANDIDATES,
+    n_ops: int = 5000,
+    warmup_ops: int | None = None,
+    processes: int | None = None,
+    cache_dir: str | os.PathLike | None = None,
+) -> list[SweepPoint]:
+    """Throughput vs. memory latency with per-point thread optimization.
+
+    Parameters
+    ----------
+    cfg
+        Base configuration; ``L_mem`` and ``n_threads`` are overridden per
+        grid cell (each cell keeps ``cfg.seed``, like the legacy protocol).
+    source
+        A :class:`CompiledTrace`, a ``TraceResult``, a legacy ``list[Op]``
+        (compiled on the fly), or an op-source callable (runs through the
+        generic loop; still parallelized).  Results are deterministic in
+        both modes: parallel runs give every cell a pristine fork of the
+        callable's state as of this call, serial runs thread it through
+        the cells in fixed grid order.  Stateless sources (microbenchmark,
+        compiled traces) are identical either way; for stateful legacy
+        ``trace_source`` closures prefer passing the compiled trace.
+    latencies
+        Memory-latency points -- scalars in seconds, or mixture specs
+        ``[(lat, prob), ...]``.
+    thread_candidates
+        Thread counts tried at every latency; earlier candidates win ties.
+    processes
+        Worker processes for the grid.  Default: up to the CPU count
+        (capped by the grid size); ``0``/``1`` forces serial.  The start
+        method is chosen automatically (``fork`` in jax-free processes,
+        a preloaded ``forkserver`` otherwise; serial when neither is
+        available or the source cannot cross a process boundary).
+    cache_dir
+        If set, finished cells are memoized as small JSON files keyed by
+        (config, trace digest, n_ops); repeated sweeps only simulate new
+        cells.  Histogram/latency collection is never cached.
+
+    Returns one :class:`SweepPoint` per latency, in input order.
+    """
+    latencies = list(latencies)
+    candidates = list(thread_candidates)
+    if not latencies or not candidates:
+        return []
+    trace, src_fn = _coerce_trace(source)
+    grid_cfgs = [
+        replace(cfg, L_mem=L, n_threads=n)
+        for L in latencies
+        for n in candidates
+    ]
+
+    # -- cache probe ---------------------------------------------------------
+    use_cache = (cache_dir is not None and trace is not None
+                 and not cfg.collect_load_hist)
+    paths: list[str | None] = [None] * len(grid_cfgs)
+    results: list[SimResult | None] = [None] * len(grid_cfgs)
+    if use_cache:
+        os.makedirs(cache_dir, exist_ok=True)
+        digest = hashlib.sha1(
+            trace.kinds.tobytes() + trace.durs.tobytes() +
+            trace.bounds.tobytes()
+        ).hexdigest()
+        for i, c in enumerate(grid_cfgs):
+            paths[i] = os.path.join(
+                str(cache_dir), _cache_key(c, digest, n_ops, warmup_ops) + ".json")
+            results[i] = _cache_load(paths[i])
+
+    todo = [i for i, r in enumerate(results) if r is None]
+
+    # -- run missing cells ---------------------------------------------------
+    if processes is None:
+        processes = min(os.cpu_count() or 1, len(todo) or 1)
+    ctx = _pick_context(trace, src_fn)
+    if todo:
+        if processes > 1 and ctx is not None and len(todo) > 1:
+            # Callable sources may carry mutable state (trace_source
+            # closures); giving every cell a pristine fork of the parent
+            # state (maxtasksperchild=1) keeps parallel results
+            # deterministic and identical to processes=1.
+            with ctx.Pool(
+                min(processes, len(todo)),
+                initializer=_worker_init,
+                initargs=(trace, src_fn, n_ops, warmup_ops),
+                maxtasksperchild=1 if src_fn is not None else None,
+            ) as pool:
+                for i, r in zip(todo,
+                                pool.map(_worker_run,
+                                         [grid_cfgs[i] for i in todo],
+                                         chunksize=1)):
+                    results[i] = r
+        else:
+            for i in todo:
+                results[i] = _run_cell(grid_cfgs[i], trace, src_fn, n_ops,
+                                       warmup_ops)
+        if use_cache:
+            for i in todo:
+                _cache_store(paths[i], results[i])
+
+    # -- reduce: best thread count per latency (first candidate wins ties) ---
+    out: list[SweepPoint] = []
+    k = len(candidates)
+    for li, L in enumerate(latencies):
+        cell = results[li * k:(li + 1) * k]
+        per_thread = {n: r.throughput for n, r in zip(candidates, cell)}
+        best_j = 0
+        for j in range(1, k):
+            if cell[j].throughput > cell[best_j].throughput:
+                best_j = j
+        out.append(SweepPoint(
+            L_mem=L,
+            n_threads=candidates[best_j],
+            result=cell[best_j],
+            per_thread=per_thread,
+        ))
+    return out

@@ -1,38 +1,39 @@
-"""Discrete-event simulator of the paper's execution model (the "FPGA testbed").
+"""Deprecation shim: the simulator now lives in :mod:`repro.core.sim`.
 
-The paper measures KV-operation throughput on real hardware whose memory
-latency is made adjustable by an FPGA CXL board. This container has no such
-hardware, so we reproduce the *measurement apparatus* as a discrete-event
-simulator with exactly the paper's free parameters:
+``repro.core.simulator`` re-exports the full public API of the old
+monolithic module so existing imports keep working:
 
-  * N user-level threads on each of C cores, strict FIFO ready ring,
-    context-switch cost T_sw charged on every yield;
-  * software prefetch with a per-core in-flight queue depth P: a prefetch
-    issued while P are in flight starts only when a slot frees (Fig. 5);
-  * a thread resuming a memory suboperation whose prefetch has not completed
-    stalls the core (the gray bars of Figs. 5 and 8);
-  * asynchronous IO: submit (T_io_pre), park until completion (L_io, gated by
-    shared SSD bandwidth B_io and IOPS R_io token clocks), then T_io_post;
-  * memory-bandwidth throttling (A_mem/B_mem spacing of prefetch starts),
-    DRAM/secondary tiering ratio rho, premature-eviction probability eps,
-    tail-latency mixtures, and a global per-op critical section T_lock for
-    multi-core lock contention.
+  * the generic event loop (:func:`simulate`) and sources
+    (:func:`microbenchmark_source`, :func:`trace_source`)
+  * :class:`SimConfig` / :class:`SimResult` / :class:`Op`
+  * the suboperation kind constants ``MEM``/``PREIO``/``POSTIO``/``CPU``
+  * :func:`best_over_threads`
 
-Operations are sequences of suboperations produced by an ``OpSource`` --
-either the microbenchmark's fixed-M pointer chase (Sec. 4.1) or measured
-traversal traces from the KV-store engines in :mod:`repro.core.kvstore`.
-
-Everything is virtual-time; wall-clock speed is irrelevant to fidelity.
+New code should import from :mod:`repro.core.sim`, which additionally
+provides the compiled fast loop (:func:`simulate_compiled`) and the batched
+sweep pipeline (:func:`sweep_latency`).
 """
 from __future__ import annotations
 
-import heapq
-import random
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, Iterable, Sequence
+import warnings
 
-US = 1e-6
+from .sim import (  # noqa: F401
+    CPU,
+    MEM,
+    POSTIO,
+    PREIO,
+    US,
+    CompiledTrace,
+    Op,
+    SimConfig,
+    SimResult,
+    best_over_threads,
+    microbenchmark_source,
+    simulate,
+    simulate_compiled,
+    sweep_latency,
+    trace_source,
+)
 
 __all__ = [
     "SimConfig",
@@ -44,336 +45,8 @@ __all__ = [
     "best_over_threads",
 ]
 
-# Suboperation kinds
-MEM, PREIO, POSTIO, CPU = 0, 1, 2, 3
-
-
-@dataclass(frozen=True)
-class Op:
-    """One KV operation: a flat tuple of (kind, duration) suboperations.
-
-    ``duration`` of a MEM subop is its CPU compute time (T_mem); PREIO /
-    POSTIO carry their CPU times; CPU is plain compute with no memory or IO
-    semantics (used by the KV engines for hashing/serialization work).
-    """
-
-    subops: tuple[tuple[int, float], ...]
-
-
-@dataclass(frozen=True)
-class SimConfig:
-    # Core/thread structure
-    n_threads: int = 48
-    n_cores: int = 1
-    T_sw: float = 0.05 * US
-    # Prefetch path
-    P: int = 12
-    L_mem: float | Sequence[tuple[float, float]] = 5.0 * US  # scalar or [(lat, prob)]
-    rho: float = 1.0
-    L_dram: float = 0.1 * US
-    eps: float = 0.0
-    A_mem: float = 64.0
-    B_mem: float = 0.0            # bytes/sec; 0 disables the throttle
-    # IO path
-    L_io: float = 80.0 * US
-    L_io_jitter: float = 0.25     # uniform +-fraction of L_io (real SSDs jitter;
-                                  # this is what naturally misaligns threads,
-                                  # Sec. 3.2.2 "timing ... will be mostly random")
-    A_io: float = 1024.0
-    B_io: float = 0.0             # 0 disables
-    R_io: float = 0.0             # 0 disables
-    # Contention
-    T_lock: float = 0.0
-    seed: int = 0
-    collect_load_hist: bool = False
-
-
-@dataclass
-class SimResult:
-    ops: int
-    time: float                     # virtual seconds elapsed
-    throughput: float               # ops/sec
-    mem_stall_total: float          # total prefetch-wait (gray-bar) seconds
-    mem_accesses: int
-    op_latencies: list[float] = field(default_factory=list)
-    load_stalls: list[float] = field(default_factory=list)  # Fig. 10 histogram
-
-    @property
-    def mean_op_latency(self) -> float:
-        return sum(self.op_latencies) / max(len(self.op_latencies), 1)
-
-
-def microbenchmark_source(
-    M: int,
-    T_mem: float,
-    T_io_pre: float,
-    T_io_post: float,
-    n_io: int = 1,
-) -> Callable[[random.Random], Op]:
-    """The Sec. 4.1 microbenchmark: M pointer-chase accesses then one IO."""
-    per_io = [(MEM, T_mem)] * (M // max(n_io, 1))
-    sub: list[tuple[int, float]] = []
-    if n_io == 0:
-        sub = [(MEM, T_mem)] * M
-    else:
-        for _ in range(n_io):
-            sub += per_io + [(PREIO, T_io_pre), (POSTIO, T_io_post)]
-    op = Op(tuple(sub))
-    return lambda rng: op
-
-
-def trace_source(ops: Sequence[Op]) -> Callable[[random.Random], Op]:
-    """Replay measured traversal traces (from the KV engines), cyclically
-    but starting each thread at a random offset so traces interleave."""
-    n = len(ops)
-
-    def src(rng: random.Random, _state={}) -> Op:
-        i = _state.setdefault("i", rng.randrange(n))
-        _state["i"] = (i + 1) % n
-        return ops[i]
-
-    return src
-
-
-class _Thread:
-    __slots__ = ("tid", "subops", "idx", "pf_ready", "op_start", "wake")
-
-    def __init__(self, tid: int):
-        self.tid = tid
-        self.subops: tuple[tuple[int, float], ...] = ()
-        self.idx = 0
-        self.pf_ready = 0.0   # completion time of the prefetch for subops[idx]
-        self.op_start = 0.0
-        self.wake = 0.0
-
-
-class _Core:
-    __slots__ = ("now", "ready", "pf_inflight", "bw_next", "idle")
-
-    def __init__(self):
-        self.now = 0.0
-        self.ready: deque[_Thread] = deque()
-        self.pf_inflight: list[float] = []   # heap of completion times
-        self.bw_next = 0.0
-        self.idle = 0.0
-
-
-def _sample_lmem(cfg: SimConfig, rng: random.Random) -> float:
-    if cfg.rho < 1.0 and rng.random() >= cfg.rho:
-        return cfg.L_dram
-    lm = cfg.L_mem
-    if isinstance(lm, (int, float)):
-        return float(lm)
-    u = rng.random()
-    acc = 0.0
-    for lat, prob in lm:
-        acc += prob
-        if u < acc:
-            return lat
-    return lm[-1][0]
-
-
-def simulate(
-    cfg: SimConfig,
-    op_source: Callable[[random.Random], Op],
-    n_ops: int,
-    warmup_ops: int | None = None,
-    collect_latency: bool = False,
-) -> SimResult:
-    """Run the event simulation until ``n_ops`` operations complete.
-
-    ``warmup_ops`` (default: 2 ops per thread) are excluded from throughput
-    so the pipeline fill does not bias short runs.
-    """
-    rng = random.Random(cfg.seed)
-    total_threads = cfg.n_threads * cfg.n_cores
-    if warmup_ops is None:
-        warmup_ops = 2 * total_threads
-
-    cores = [_Core() for _ in range(cfg.n_cores)]
-    # Shared (cross-core) token clocks for the SSD and the op-lock.
-    io_bw_next = 0.0
-    io_tok_next = 0.0
-    lock_next = 0.0
-
-    # Parked threads (waiting on IO): heap of (wake_time, seq, core_id, thread)
-    parked: list[tuple[float, int, int, _Thread]] = []
-    seq = 0
-
-    def start_op(th: _Thread, now: float) -> None:
-        op = op_source(rng)
-        th.subops = op.subops
-        th.idx = 0
-        th.op_start = now
-
-    for cid, core in enumerate(cores):
-        for t in range(cfg.n_threads):
-            th = _Thread(cid * cfg.n_threads + t)
-            start_op(th, 0.0)
-            # The first MEM access of the very first op: treat its prefetch
-            # as issued at a random phase before t=0 (threads never start in
-            # lockstep on real hardware), so the warm-up does not seed the
-            # pathological aligned schedule of Fig. 7(a).
-            th.pf_ready = rng.random() * _sample_lmem(cfg, rng)
-            core.ready.append(th)
-
-    done = 0
-    counted = 0
-    t_start_measure = None
-    mem_stall = 0.0
-    mem_accesses = 0
-    op_lat: list[float] = []
-    stalls: list[float] = []
-    hist = cfg.collect_load_hist
-
-    # Event loop over cores ordered by their local clocks.
-    core_heap = [(0.0, cid) for cid in range(cfg.n_cores)]
-    heapq.heapify(core_heap)
-
-    measuring = lambda: done >= warmup_ops
-
-    while counted < n_ops:
-        # Wake any parked threads whose IO completed before the earliest
-        # core time (they rejoin their core's ready ring).
-        tmin = core_heap[0][0]
-        while parked and parked[0][0] <= tmin:
-            _, _, cid, th = heapq.heappop(parked)
-            cores[cid].ready.append(th)
-
-        t_core, cid = heapq.heappop(core_heap)
-        core = cores[cid]
-        core.now = max(core.now, t_core)
-
-        if not core.ready:
-            # Idle until this core's earliest parked thread wakes (or any
-            # parked thread if the core has none -- then just re-arm later).
-            mine = [e for e in parked if e[2] == cid]
-            if not mine:
-                if parked:
-                    heapq.heappush(core_heap, (parked[0][0], cid))
-                # else: deadlock cannot happen (some thread always runnable)
-                continue
-            wake = min(e[0] for e in mine)
-            core.now = max(core.now, wake)
-            while parked and parked[0][0] <= core.now:
-                _, _, c2, th2 = heapq.heappop(parked)
-                cores[c2].ready.append(th2)
-            if not core.ready:
-                heapq.heappush(core_heap, (core.now + 1e-9, cid))
-                continue
-
-        th = core.ready.popleft()
-        kind, dur = th.subops[th.idx]
-        now = core.now
-
-        if kind == MEM:
-            if cfg.eps > 0.0 and rng.random() < cfg.eps:
-                ready_at = now + _sample_lmem(cfg, rng)  # premature eviction
-            else:
-                ready_at = th.pf_ready
-            stall = ready_at - now
-            if stall > 0.0:
-                if measuring():
-                    mem_stall += stall
-                now = ready_at
-            if hist and measuring():
-                stalls.append(max(stall, 0.0))
-            if measuring():
-                mem_accesses += 1
-            now += dur
-        elif kind == PREIO:
-            now += dur
-        elif kind == POSTIO:
-            now += dur
-        else:  # CPU
-            now += dur
-
-        th.idx += 1
-        end_of_op = th.idx >= len(th.subops)
-
-        if end_of_op:
-            done += 1
-            if measuring():
-                if t_start_measure is None:
-                    t_start_measure = now
-                counted += 1
-                if collect_latency:
-                    op_lat.append(now - th.op_start)
-            start_op(th, now)
-            if cfg.T_lock > 0.0:
-                start = max(now, lock_next)
-                now = start + cfg.T_lock
-                lock_next = now
-
-        nkind = th.subops[th.idx][0]
-        park_until = None
-
-        if kind == PREIO and not end_of_op:
-            # Submit the IO now; completion is gated by the shared SSD clocks.
-            svc = now
-            if cfg.R_io > 0.0:
-                svc = max(svc, io_tok_next)
-                io_tok_next = svc + 1.0 / cfg.R_io
-            if cfg.B_io > 0.0:
-                svc = max(svc, io_bw_next)
-                io_bw_next = svc + cfg.A_io / cfg.B_io
-            lat_io = cfg.L_io
-            if cfg.L_io_jitter > 0.0:
-                lat_io *= 1.0 + cfg.L_io_jitter * (2.0 * rng.random() - 1.0)
-            park_until = svc + lat_io
-
-        if nkind == MEM:
-            # Issue the prefetch for the next access (pointer now known).
-            pq = core.pf_inflight
-            while pq and pq[0] <= now:
-                heapq.heappop(pq)
-            start = now if len(pq) < cfg.P else max(now, pq[0])
-            if cfg.B_mem > 0.0:
-                start = max(start, core.bw_next)
-                core.bw_next = start + cfg.A_mem / cfg.B_mem
-            comp = start + _sample_lmem(cfg, rng)
-            if len(pq) >= cfg.P:
-                heapq.heappop(pq)
-            heapq.heappush(pq, comp)
-            th.pf_ready = comp
-
-        now += cfg.T_sw  # one context switch per suboperation (yield)
-        core.now = now
-
-        if park_until is not None:
-            seq += 1
-            heapq.heappush(parked, (max(park_until, now), seq, cid, th))
-        else:
-            core.ready.append(th)
-        heapq.heappush(core_heap, (core.now, cid))
-
-    t0 = t_start_measure if t_start_measure is not None else 0.0
-    t_end = max(c.now for c in cores)
-    elapsed = max(t_end - t0, 1e-12)
-    return SimResult(
-        ops=counted,
-        time=elapsed,
-        throughput=counted / elapsed,
-        mem_stall_total=mem_stall,
-        mem_accesses=mem_accesses,
-        op_latencies=op_lat,
-        load_stalls=stalls,
-    )
-
-
-def best_over_threads(
-    cfg: SimConfig,
-    op_source: Callable[[random.Random], Op],
-    n_ops: int,
-    candidates: Iterable[int] = (8, 16, 24, 32, 48, 64, 96, 128),
-) -> tuple[SimResult, int]:
-    """The paper's protocol: per latency point, optimize the thread count."""
-    import dataclasses
-
-    best: tuple[SimResult, int] | None = None
-    for n in candidates:
-        r = simulate(dataclasses.replace(cfg, n_threads=n), op_source, n_ops)
-        if best is None or r.throughput > best[0].throughput:
-            best = (r, n)
-    assert best is not None
-    return best
+warnings.warn(
+    "repro.core.simulator is deprecated; import from repro.core.sim instead",
+    DeprecationWarning,
+    stacklevel=2,
+)

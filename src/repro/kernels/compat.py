@@ -1,0 +1,10 @@
+"""Version compatibility for jax.experimental.pallas.tpu.
+
+``CompilerParams`` was called ``TPUCompilerParams`` before jax 0.6; the
+kernels target the new name and fall back here so they run on both.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

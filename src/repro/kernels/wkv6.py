@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 __all__ = ["wkv6"]
 
 
@@ -82,7 +84,7 @@ def wkv6(
         out_specs=pl.BlockSpec(blk, spec),
         out_shape=jax.ShapeDtypeStruct((B, S, H, D), r.dtype),
         scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,135 @@
+"""Back-compat shims (`repro.core.kvstore` / `repro.core.simulator`) and the
+engine registry introduced by the layering refactor."""
+import importlib
+import warnings
+
+import pytest
+
+import repro.core.kvstore as kvstore_shim
+import repro.core.simulator as simulator_shim
+from repro.core.engines import (
+    KVEngine,
+    LSMStore,
+    TreeIndexStore,
+    TwoTierCacheStore,
+    available_engines,
+    create_engine,
+    get_engine,
+)
+from repro.core.trace_ir import CompiledTrace, Op
+
+US = 1e-6
+
+
+class TestShims:
+    KV_NAMES = ["EngineTimes", "Recorder", "TraceResult", "TreeIndexStore",
+                "LSMStore", "TwoTierCacheStore", "run_trace"]
+    SIM_NAMES = ["SimConfig", "SimResult", "Op", "simulate",
+                 "microbenchmark_source", "trace_source", "best_over_threads",
+                 "MEM", "PREIO", "POSTIO", "CPU", "US"]
+
+    @pytest.mark.parametrize("name", KV_NAMES)
+    def test_kvstore_exports(self, name):
+        assert hasattr(kvstore_shim, name)
+
+    @pytest.mark.parametrize("name", SIM_NAMES)
+    def test_simulator_exports(self, name):
+        assert hasattr(simulator_shim, name)
+
+    @pytest.mark.parametrize("shim", [kvstore_shim, simulator_shim])
+    def test_shims_warn_on_import(self, shim):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            importlib.reload(shim)
+        assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+
+    def test_attribute_style_access_on_repro_core(self):
+        # `import repro.core` then attribute access worked pre-refactor
+        # (the old __init__ imported both submodules); PEP 562 keeps it.
+        import repro.core
+        assert repro.core.kvstore is kvstore_shim
+        assert repro.core.simulator is simulator_shim
+        with pytest.raises(AttributeError):
+            repro.core.no_such_module
+
+    def test_shim_classes_are_the_canonical_ones(self):
+        from repro.core.engines import lsm
+        from repro.core.sim import config
+        assert kvstore_shim.LSMStore is lsm.LSMStore
+        assert simulator_shim.SimConfig is config.SimConfig
+
+    def test_legacy_op_replay_path_still_works(self):
+        op = Op(((simulator_shim.MEM, 0.1 * US),
+                 (simulator_shim.PREIO, 1.5 * US),
+                 (simulator_shim.POSTIO, 0.2 * US)))
+        src = simulator_shim.trace_source([op])
+        cfg = simulator_shim.SimConfig(L_mem=1 * US, n_threads=8, seed=1)
+        r = simulator_shim.simulate(cfg, src, 200)
+        assert r.ops == 200 and r.throughput > 0
+
+    def test_traceresult_accepts_legacy_op_list(self):
+        ops = [Op(((0, 0.1 * US),))] * 3
+        tr = kvstore_shim.TraceResult(trace=ops, mem_per_op=1.0, io_per_op=0.0)
+        assert isinstance(tr.trace, CompiledTrace)
+        assert tr.ops == ops
+        # ... including under the old dataclass's field name
+        legacy = kvstore_shim.TraceResult(ops=ops, mem_per_op=1.0,
+                                          io_per_op=0.0)
+        assert legacy.ops == ops
+        with pytest.raises(TypeError):
+            kvstore_shim.TraceResult(mem_per_op=1.0, io_per_op=0.0)
+
+    def test_kvstore_shim_keeps_transitive_names(self):
+        # the old module exposed these via its own imports; legacy code
+        # imported them from repro.core.kvstore directly
+        for name in ("Op", "MEM", "PREIO", "POSTIO", "CPU", "US",
+                     "OpParams", "Workload"):
+            assert hasattr(kvstore_shim, name), name
+
+    def test_recorder_ops_clear_writes_through(self):
+        # the pre-refactor run_trace bounded warm-up memory via
+        # `warm_rec.ops.clear()`; that idiom must keep clearing the recorder
+        rec = kvstore_shim.Recorder(kvstore_shim.EngineTimes())
+        rec.mem(2)
+        rec.end_op()
+        rec.ops.clear()
+        assert rec.n_ops == 0
+        assert rec.n_mem == 0 and rec.n_io == 0  # averages stay consistent
+        assert rec.ops == []
+        rec.mem(1)
+        rec.end_op()
+        assert len(rec.ops) == 1
+
+    def test_recorder_ops_view_mid_operation(self):
+        rec = kvstore_shim.Recorder(kvstore_shim.EngineTimes())
+        rec.mem(1)
+        rec.end_op()
+        rec.mem(2)                      # op still in flight
+        assert len(rec.ops) == 1        # only completed ops appear
+        rec.end_op()
+        assert len(rec.ops) == 2
+
+
+class TestRegistry:
+    def test_canonical_names_and_aliases(self):
+        eng = available_engines()
+        assert eng["tree-index"] is TreeIndexStore
+        assert eng["aerospike-like"] is TreeIndexStore
+        assert eng["lsm"] is LSMStore
+        assert eng["rocksdb-like"] is LSMStore
+        assert eng["two-tier-cache"] is TwoTierCacheStore
+        assert eng["cachelib-like"] is TwoTierCacheStore
+
+    def test_get_and_create(self):
+        assert get_engine("lsm") is LSMStore
+        store = create_engine("lsm", 1000, cache_blocks=10)
+        assert isinstance(store, LSMStore) and store.cache_cap == 10
+        with pytest.raises(KeyError, match="unknown engine"):
+            get_engine("nope")
+
+    def test_engines_satisfy_protocol(self):
+        for cls, kwargs in ((TreeIndexStore, {}), (LSMStore, {}),
+                            (TwoTierCacheStore, {})):
+            store = cls(500, **kwargs)
+            assert isinstance(store, KVEngine)
+            assert isinstance(store.stats(), dict)

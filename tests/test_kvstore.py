@@ -1,7 +1,7 @@
 """KV-store engines: semantics, traces, and model agreement (O4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st  # optional-hypothesis shim
 
 from repro.core import workloads
 from repro.core.kvstore import (

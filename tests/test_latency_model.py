@@ -1,7 +1,7 @@
 """Unit + property tests for the paper's closed-form throughput models."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st  # optional-hypothesis shim
 
 from repro.core.latency_model import (
     OpParams,

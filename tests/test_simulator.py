@@ -3,7 +3,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st  # optional-hypothesis shim
 
 from repro.core.latency_model import (
     OpParams,

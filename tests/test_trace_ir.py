@@ -1,0 +1,126 @@
+"""The columnar trace IR: roundtrips, validation, and vectorized summaries."""
+import numpy as np
+import pytest
+
+from repro.core import workloads
+from repro.core.engines import EngineTimes, LSMStore, Recorder, run_trace
+from repro.core.trace_ir import CPU, MEM, POSTIO, PREIO, CompiledTrace, Op
+
+US = 1e-6
+
+
+@pytest.fixture(scope="module")
+def lsm_trace():
+    store = LSMStore(20_000)
+    wl = workloads.zipf(20_000, 8_000, 0.99, (2, 1), seed=3)
+    return run_trace(store, wl)
+
+
+class TestCompiledTrace:
+    def test_roundtrip_from_ops(self, lsm_trace):
+        ops = lsm_trace.ops
+        trace = CompiledTrace.from_ops(ops)
+        assert trace.n_ops == len(ops)
+        assert trace.to_ops() == ops
+
+    def test_recorder_emits_columnar_directly(self):
+        rec = Recorder(EngineTimes())
+        rec.mem(3)
+        rec.cpu(1e-7)
+        rec.io()
+        rec.end_op()
+        rec.mem(1)
+        rec.end_op()
+        trace = rec.compile()
+        assert trace.n_ops == 2
+        assert trace.kinds.tolist() == [MEM, MEM, MEM, CPU, PREIO, POSTIO, MEM]
+        assert trace.bounds.tolist() == [0, 6, 7]
+        # the legacy row view matches the columns
+        assert CompiledTrace.from_ops(rec.ops).to_ops() == trace.to_ops()
+
+    def test_empty_op_padding(self):
+        rec = Recorder(EngineTimes())
+        rec.end_op()                    # engines never emit empty ops
+        trace = rec.compile()
+        assert trace.kinds.tolist() == [CPU]
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            CompiledTrace(np.array([0]), np.array([1.0]), np.array([0, 0, 1]))
+        with pytest.raises(ValueError):
+            CompiledTrace(np.array([0, 0]), np.array([1.0]), np.array([0, 2]))
+
+    def test_arrays_immutable(self, lsm_trace):
+        with pytest.raises(ValueError):
+            lsm_trace.trace.kinds[0] = CPU
+
+    def test_pickle_roundtrip_stays_immutable(self, lsm_trace):
+        import pickle
+
+        trace = lsm_trace.trace
+        trace.as_lists()           # populate the cache; it must not ship
+        clone = pickle.loads(pickle.dumps(trace))
+        assert clone._lists is None
+        assert clone.to_ops() == trace.to_ops()
+        with pytest.raises(ValueError):
+            clone.kinds[0] = CPU
+
+    def test_counts_and_lists_cache(self, lsm_trace):
+        trace = lsm_trace.trace
+        counts = trace.counts()
+        assert counts["MEM"] == int((trace.kinds == MEM).sum())
+        assert trace.as_lists() is trace.as_lists()   # cached
+        kinds, durs, starts, ends = trace.as_lists()
+        assert len(kinds) == len(durs) == trace.n_subops
+        assert len(starts) == len(ends) == trace.n_ops
+
+
+def _yield_spans_reference(ops):
+    """The pre-refactor row-oriented span computation (kvstore.op_params)."""
+    span_sum = {MEM: 0.0, PREIO: 0.0, POSTIO: 0.0}
+    span_n = {MEM: 0, PREIO: 0, POSTIO: 0}
+    pending_cpu = 0.0
+    last_yield = None
+    for op in ops:
+        for kind, dur in op.subops:
+            if kind == CPU:
+                pending_cpu += dur
+                continue
+            span_sum[kind] += dur + pending_cpu
+            span_n[kind] += 1
+            pending_cpu = 0.0
+            last_yield = kind
+    if pending_cpu > 0.0 and last_yield is not None:
+        span_sum[last_yield] += pending_cpu
+    return span_sum, span_n
+
+
+class TestYieldSpans:
+    def test_matches_row_oriented_reference(self, lsm_trace):
+        ref_sum, ref_n = _yield_spans_reference(lsm_trace.ops)
+        vec_sum, vec_n = lsm_trace.trace.yield_spans()
+        assert vec_n == ref_n
+        for kind in (MEM, PREIO, POSTIO):
+            assert vec_sum[kind] == pytest.approx(ref_sum[kind], rel=1e-9)
+
+    def test_trailing_cpu_folds_into_last_yield(self):
+        ops = [Op(((MEM, 1.0), (CPU, 0.5))), Op(((CPU, 0.25), (PREIO, 2.0),
+                                                 (POSTIO, 0.5), (CPU, 0.125)))]
+        trace = CompiledTrace.from_ops(ops)
+        span_sum, span_n = trace.yield_spans()
+        ref_sum, ref_n = _yield_spans_reference(ops)
+        assert span_n == ref_n
+        for kind in (MEM, PREIO, POSTIO):
+            assert span_sum[kind] == pytest.approx(ref_sum[kind], rel=1e-12)
+        # CPU between yields folds forward, the final 0.125 folds backward
+        assert span_sum[PREIO] == pytest.approx(2.0 + 0.5 + 0.25)
+        assert span_sum[POSTIO] == pytest.approx(0.5 + 0.125)
+
+    def test_op_params_matches_reference(self, lsm_trace):
+        p = lsm_trace.op_params(None, P=12, T_sw=0.05 * US)
+        ref_sum, ref_n = _yield_spans_reference(lsm_trace.ops)
+        assert p.T_mem == pytest.approx(ref_sum[MEM] / ref_n[MEM], rel=1e-9)
+        assert p.T_io_pre == pytest.approx(ref_sum[PREIO] / ref_n[PREIO],
+                                           rel=1e-9)
+        assert p.M == lsm_trace.mem_per_op
+        assert p.S == pytest.approx(lsm_trace.io_per_op)

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st  # optional-hypothesis shim
 
 from repro.configs import ARCHS, smoke_config
 from repro.models.layers import init_params
