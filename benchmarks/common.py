@@ -10,16 +10,30 @@ compiled trace shared across the whole latency x threads grid, cells fanned
 out over worker processes.  ``benchmarks.run`` can point ``SWEEP_CACHE`` at
 a directory (``--sweep-cache``) to memoize finished cells across runs and
 ``SWEEP_PROCESSES`` (``--processes``) at a worker count.
+
+The engine x device matrix: any engine in the :mod:`repro.core.engines`
+registry can be swept against any device config via :func:`build_engine`
+(engine + its default paper-style workload) and :func:`matrix_sweep`
+(latency-tolerance curve per (engine, n_ssd) pair) -- this is what
+``benchmarks.run --engine NAME --devices N`` and the cross-engine figure
+drive.
 """
 from __future__ import annotations
 
 from repro.core import workloads
-from repro.core.engines import LSMStore, TreeIndexStore, TwoTierCacheStore, run_trace
+from repro.core.engines import (
+    LSMStore,
+    TreeIndexStore,
+    TwoTierCacheStore,
+    get_engine,
+    run_trace,
+)
 from repro.core.latency_model import US
 from repro.core.sim import SimConfig, sweep_latency
 
 L_SWEEP_US = (0.1, 0.3, 0.5, 1, 2, 3, 5, 8, 10)
 N_CANDIDATES = (16, 24, 32, 48, 64)
+MATRIX_L_US = (0.1, 1, 3, 5, 8, 10)
 
 # Set by benchmarks.run from --processes / --sweep-cache.
 SWEEP_PROCESSES: int | None = None
@@ -59,22 +73,59 @@ def sweep_trace(src, l_us_list=L_SWEEP_US, n_ops=5000, P=12, seed=7, **cfg_kw):
     return {l_us: pt.result for l_us, pt in pts.items()}
 
 
-def build_engines(nk=100_000, nops=30_000):
-    """The three engines with their default (paper Table 5-ish) workloads."""
-    return {
-        "aerospike-like": (
-            TreeIndexStore(nk, seed=1),
-            workloads.uniform(nk, nops, (1, 0), seed=2),
-        ),
-        "rocksdb-like": (
-            LSMStore(nk),
-            workloads.zipf(nk, nops, 0.99, (1, 0), seed=3),
-        ),
-        "cachelib-like": (
-            TwoTierCacheStore(nk, seed=4),
-            workloads.gaussian(nk, nops, 0.08, (2, 1), seed=5),
-        ),
-    }
+# -- the engine axis ---------------------------------------------------------
+
+# Default (paper Table 5-ish) workload and constructor kwargs per canonical
+# engine name.  Workload factories take (n_keys, n_ops).
+ENGINE_DEFAULTS = {
+    "tree-index": (
+        dict(seed=1),
+        lambda nk, nops: workloads.uniform(nk, nops, (1, 0), seed=2),
+    ),
+    "lsm": (
+        dict(),
+        lambda nk, nops: workloads.zipf(nk, nops, 0.99, (1, 0), seed=3),
+    ),
+    "two-tier-cache": (
+        dict(seed=4),
+        lambda nk, nops: workloads.gaussian(nk, nops, 0.08, (2, 1), seed=5),
+    ),
+    "hash-index": (
+        dict(seed=6),
+        lambda nk, nops: workloads.uniform(nk, nops, (1, 0), seed=2),
+    ),
+    "slab-cache": (
+        dict(seed=8),
+        lambda nk, nops: workloads.zipf(nk, nops, 0.9, (3, 1), seed=8),
+    ),
+}
+
+
+def build_engine(name: str, nk: int = 100_000, nops: int = 30_000):
+    """One registered engine + its default workload, by any registry name.
+
+    Accepts canonical names, aliases, and CLI-style underscores
+    (``hash_index``); unknown engines raise ``KeyError`` listing what is
+    registered.
+    """
+    cls = get_engine(name)
+    canonical = cls.engine_name
+    kwargs, wl_factory = ENGINE_DEFAULTS.get(
+        canonical, (dict(), lambda nk, nops: workloads.uniform(nk, nops, (1, 0), seed=2))
+    )
+    return cls(nk, **kwargs), wl_factory(nk, nops)
+
+
+def build_engines(nk=100_000, nops=30_000, names=None):
+    """Engines with their default workloads, keyed by paper-facing name.
+
+    The original three keep their paper aliases as keys (existing figures
+    index by those); the newer engines use their canonical registry names.
+    """
+    if names is None:
+        names = ("aerospike-like", "rocksdb-like", "cachelib-like",
+                 "hash-index", "slab-cache")
+    return {name: build_engine(name, nk, nops) for name in names}
 
 
 def engine_trace(name, store, wl):
@@ -82,3 +133,43 @@ def engine_trace(name, store, wl):
     tr = run_trace(store, wl)
     p = tr.op_params(store.times, P=12, T_sw=0.05 * US)
     return tr, p, tr.trace
+
+
+# -- the device axis ---------------------------------------------------------
+
+def device_config(n_ssd: int = 1, R_io: float = 0.0, B_io: float = 0.0,
+                  L_switch_us: float = 0.0, **cfg_kw) -> SimConfig:
+    """A :class:`SimConfig` for one device setup of the matrix.
+
+    ``R_io``/``B_io`` are per-device rates; ``n_ssd > 1`` stripes IOs
+    round-robin over per-device token clocks, and only a multi-device pool
+    pays the CXL/PCIe switch fan-out hop ``L_switch_us`` per IO (a single
+    direct-attached SSD has no switch to cross).
+    """
+    return SimConfig(n_ssd=n_ssd, R_io=R_io, B_io=B_io,
+                     L_switch=L_switch_us * US if n_ssd > 1 else 0.0,
+                     **cfg_kw)
+
+
+def matrix_sweep(engine: str, n_ssd: int = 1, l_us_list=MATRIX_L_US,
+                 candidates=N_CANDIDATES, nk: int = 100_000,
+                 nops: int = 30_000, n_ops: int = 5000, seed: int = 7,
+                 R_io: float = 250e3, L_switch_us: float = 0.3):
+    """Latency-tolerance sweep of one (engine, device-count) matrix cell.
+
+    Returns ``(trace_result, {l_us: SweepPoint})``.  Device defaults give
+    each SSD a 250 kIOPS random-read token clock -- one device caps the
+    IO-richest engines (hash index runs every get through the SSD) while
+    two devices free them, so the figure shows both axes: device count
+    lifts IOPS-bound curves, memory latency bends the unbound ones.  Pools
+    with ``n_ssd > 1`` also pay a 0.3 us switch fan-out hop per IO.
+    """
+    store, wl = build_engine(engine, nk, nops)
+    tr = run_trace(store, wl)
+    cfg = device_config(n_ssd=n_ssd, R_io=R_io, L_switch_us=L_switch_us,
+                        P=12, seed=seed)
+    pts = sweep_latency(
+        cfg, tr.trace, [l_us * US for l_us in l_us_list], candidates,
+        n_ops=n_ops, processes=SWEEP_PROCESSES, cache_dir=SWEEP_CACHE,
+    )
+    return tr, dict(zip(l_us_list, pts))

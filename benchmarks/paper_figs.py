@@ -34,7 +34,20 @@ from repro.core.sim import (
 )
 from repro.core.tiering import FLASH_CXL
 
-from .common import L_SWEEP_US, N_CANDIDATES, build_engines, emit, engine_trace, sweep_points
+from .common import (
+    L_SWEEP_US,
+    N_CANDIDATES,
+    build_engine,
+    build_engines,
+    emit,
+    engine_trace,
+    matrix_sweep,
+    sweep_points,
+)
+
+#: the paper's three modified stores (Figs. 11/13); the matrix figure widens
+#: this to every registered engine
+PAPER_ENGINES = ("aerospike-like", "rocksdb-like", "cachelib-like")
 
 
 def fig3_model_curves() -> None:
@@ -94,7 +107,7 @@ def fig11_microbenchmark() -> None:
 
 def fig11_kvstores() -> None:
     """Fig. 11(c)(d)(e): the three engines vs models (single core)."""
-    for name, (store, wl) in build_engines().items():
+    for name, (store, wl) in build_engines(names=PAPER_ENGINES).items():
         tr, p, trace = engine_trace(name, store, wl)
         pts = sweep_points(trace, (0.1, 1, 3, 5, 8, 10), N_CANDIDATES,
                            n_ops=5000, P=p.P, seed=7)
@@ -157,7 +170,7 @@ def fig12_extended() -> None:
 
 def fig14_multicore() -> None:
     """Fig. 14: multi-core scaling at 5 us with lock contention."""
-    store, wl = build_engines()["aerospike-like"]
+    store, wl = build_engine("aerospike-like")
     tr, p, trace = engine_trace("aerospike-like", store, wl)
     base = None
     for cores in (1, 2, 4, 8, 16):
@@ -219,7 +232,7 @@ def fig16_threads() -> None:
 
 def fig17_op_latency() -> None:
     """Fig. 17: KV operation latency grows mildly with memory latency."""
-    store, wl = build_engines()["aerospike-like"]
+    store, wl = build_engine("aerospike-like")
     tr, p, trace = engine_trace("aerospike-like", store, wl)
     base = None
     for l_us in (0.1, 2, 5, 10):
@@ -234,7 +247,7 @@ def fig17_op_latency() -> None:
 def table6_cpr() -> None:
     """Table 6: cost-performance ratios, with the tail-latency profile of
     Sec. 5.1 driving the measured degradation d for flash."""
-    store, wl = build_engines()["aerospike-like"]
+    store, wl = build_engine("aerospike-like")
     tr, p, trace = engine_trace("aerospike-like", store, wl)
     thr = {}
     for tag, lmem in (("dram", 0.1 * US), ("flash", FLASH_CXL.latency_spec())):
@@ -277,12 +290,37 @@ def fig18_capacity() -> None:
          f"hit={tr_b.hit_stats['block_cache']:.3f};gain={gain:+.3f}")
 
 
+def fig13_engine_matrix() -> None:
+    """Engine x device matrix: the paper's key qualitative result across the
+    full registry.  One latency-tolerance curve per (engine, SSD count) --
+    IO-rich engines (hash index: S=1) stay near-flat out to 10 us while
+    cache engines with high hit rates (few IOs to hide behind) degrade
+    fastest; doubling the SSDs moves every IOPS-bound curve up without
+    changing its latency-tolerance shape."""
+    lats = (0.1, 1, 5, 10)
+    cands = (24, 40, 56)
+    for engine in ("tree-index", "lsm", "two-tier-cache", "hash-index",
+                   "slab-cache"):
+        for n_ssd in (1, 2):
+            tr, pts = matrix_sweep(engine, n_ssd=n_ssd, l_us_list=lats,
+                                   candidates=cands, n_ops=4000)
+            base = pts[lats[0]].throughput
+            for l_us, pt in pts.items():
+                emit(f"fig13/{engine}/ssd{n_ssd}/L{l_us}us",
+                     1e6 / pt.throughput,
+                     f"norm={pt.throughput / base:.4f}")
+            d10 = 1 - pts[10].throughput / base
+            emit(f"fig13/{engine}/ssd{n_ssd}/degradation_at_10us", 0.0,
+                 f"d={d10:.4f};S={tr.io_per_op:.3f};M={tr.mem_per_op:.2f}")
+
+
 ALL = [
     fig3_model_curves,
     fig10_load_latency,
     fig11_microbenchmark,
     fig11_kvstores,
     fig12_extended,
+    fig13_engine_matrix,
     fig14_multicore,
     fig15_settings,
     fig16_threads,

@@ -4,11 +4,17 @@
 ``python -m benchmarks.run``            -- paper figures + kernels + roofline
 ``python -m benchmarks.run --only fig11``
 ``python -m benchmarks.run --only fig11 --processes 4 --sweep-cache .sweep_cache``
+``python -m benchmarks.run --engine hash_index --devices 2``
+                                        -- latency-tolerance sweep of one
+                                           registered engine on N SSDs
 
 Latency sweeps go through the batched :func:`repro.core.sim.sweep_latency`
 pipeline; ``--processes`` sets the worker-process count for the grid and
 ``--sweep-cache`` memoizes finished sweep cells on disk so repeated runs
-only simulate what changed.
+only simulate what changed.  ``--engine`` accepts any name or alias in the
+``repro.core.engines`` registry (underscores work: ``hash_index`` ==
+``hash-index``); ``--devices`` sets the simulated SSD count (per-device
+IOPS token clocks, round-robin striping, switch fan-out hop).
 """
 from __future__ import annotations
 
@@ -16,6 +22,31 @@ import argparse
 import sys
 import time
 import traceback
+
+
+def run_engine_matrix(engine: str, devices: int) -> None:
+    """One engine x device matrix cell as a full latency-tolerance sweep."""
+    from . import common
+
+    try:
+        tr, pts = common.matrix_sweep(engine, n_ssd=devices)
+    except KeyError as e:  # unknown engine: get_engine lists what exists
+        sys.exit(str(e.args[0]) if e.args else str(e))
+    base = None
+    for l_us, pt in pts.items():
+        base = base or pt.throughput
+        common.emit(
+            f"matrix/{engine}/ssd{devices}/L{l_us}us",
+            1e6 / pt.throughput,
+            f"norm={pt.throughput / base:.4f};threads={pt.n_threads}",
+        )
+    l_last = list(pts)[-1]
+    common.emit(
+        f"matrix/{engine}/ssd{devices}/summary",
+        0.0,
+        f"degradation_at_{l_last}us={1 - pts[l_last].throughput / base:.4f};"
+        f"S={tr.io_per_op:.3f};M={tr.mem_per_op:.2f}",
+    )
 
 
 def main() -> None:
@@ -26,18 +57,32 @@ def main() -> None:
     ap.add_argument("--sweep-cache", default=None, metavar="DIR",
                     help="directory memoizing finished sweep cells "
                          "(e.g. .sweep_cache)")
+    ap.add_argument("--engine", default=None, metavar="NAME",
+                    help="sweep one registered engine instead of the paper "
+                         "figures (any registry name/alias, e.g. hash_index)")
+    ap.add_argument("--devices", type=int, default=1, metavar="N",
+                    help="simulated SSD count for --engine (default 1)")
     args = ap.parse_args()
 
-    from . import common, kernels_bench, paper_figs, roofline_table
+    from . import common
 
     common.SWEEP_PROCESSES = args.processes
     common.SWEEP_CACHE = args.sweep_cache
+
+    print("name,us_per_call,derived")
+
+    if args.engine is not None:
+        if args.devices < 1:
+            sys.exit("--devices must be >= 1")
+        run_engine_matrix(args.engine, args.devices)
+        return
+
+    from . import kernels_bench, paper_figs, roofline_table
 
     benches = [(f.__name__, f) for f in paper_figs.ALL]
     benches += [(f.__name__, f) for f in kernels_bench.ALL]
     benches += [("roofline_table", roofline_table.main)]
 
-    print("name,us_per_call,derived")
     failed = 0
     for name, fn in benches:
         if args.only and args.only not in name:

@@ -5,7 +5,7 @@ Run:  PYTHONPATH=src python examples/kvstore_demo.py
 import numpy as np
 
 from repro.core import workloads
-from repro.core.engines import LSMStore, TreeIndexStore, run_trace
+from repro.core.engines import LSMStore, TreeIndexStore, create_engine, run_trace
 from repro.core.latency_model import US, theta_mask_inv, theta_prob_inv
 from repro.core.sim import SimConfig, microbenchmark_source, sweep_latency
 from repro.core.tiering import FLASH_CXL
@@ -46,3 +46,15 @@ print(f"  DRAM {r_dram.throughput / 1e3:.1f}k vs flash-tail "
       f"{r_tail.throughput / 1e3:.1f}k "
       f"-> degradation {1 - r_tail.throughput / r_dram.throughput:.1%} "
       f"(paper: 2-19%)")
+
+print("O6: the engine x device matrix -- any registered engine against any")
+print("    SSD pool (per-device IOPS token clocks, switch fan-out hop):")
+hstore = create_engine("hash-index", 50_000, seed=6)
+htr = run_trace(hstore, workloads.uniform(50_000, 20_000, (1, 0), seed=2))
+for n_ssd in (1, 2):
+    cfg = SimConfig(P=12, R_io=250e3, n_ssd=n_ssd,
+                    L_switch=0.3 * US if n_ssd > 1 else 0.0)
+    pts = sweep_latency(cfg, htr.trace, [0.1 * US, 10 * US], n_ops=4000)
+    thr = [pt.throughput / 1e3 for pt in pts]
+    print(f"  hash-index x {n_ssd} SSD: {thr[0]:6.1f}k -> {thr[1]:6.1f}k "
+          f"at 10us ({thr[1] / thr[0]:.0%} kept)")

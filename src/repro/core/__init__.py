@@ -1,7 +1,8 @@
 """Core of the reproduction, in three layers plus the analytical model:
 
   * :mod:`repro.core.engines`  -- pluggable KV-store engines (tree index /
-    LSM / two-tier cache) recording columnar suboperation traces
+    LSM / two-tier cache / hash index / slab cache) recording columnar
+    suboperation traces
   * :mod:`repro.core.trace_ir` -- the compiled columnar trace format shared
     by engines, simulator, model calibration and benchmarks
   * :mod:`repro.core.sim`      -- the discrete-event simulator standing in

@@ -9,6 +9,11 @@ designs (Fig. 13) as real Python/numpy structures:
   * :class:`LSMStore`          (``lsm`` / ``rocksdb-like``)
   * :class:`TwoTierCacheStore` (``two-tier-cache`` / ``cachelib-like``)
 
+plus two more points of the paper's index/cache design space:
+
+  * :class:`HashIndexStore`    (``hash-index`` / ``open-addressing``)
+  * :class:`SlabCacheStore`    (``slab-cache`` / ``memcached-like``)
+
 Running a workload through :func:`run_trace` produces a columnar
 :class:`~repro.core.trace_ir.CompiledTrace` in which every pointer
 dereference on slow memory is a MEM subop and every SSD access a
@@ -38,6 +43,8 @@ from .trace import Recorder, TraceResult, run_trace  # noqa: F401
 from .tree_index import TreeIndexStore  # noqa: F401
 from .lsm import LSMStore  # noqa: F401
 from .two_tier_cache import TwoTierCacheStore  # noqa: F401
+from .hash_index import HashIndexStore  # noqa: F401
+from .slab_cache import SlabCacheStore  # noqa: F401
 
 __all__ = [
     "EngineTimes",
@@ -48,6 +55,8 @@ __all__ = [
     "TreeIndexStore",
     "LSMStore",
     "TwoTierCacheStore",
+    "HashIndexStore",
+    "SlabCacheStore",
     "register_engine",
     "get_engine",
     "create_engine",

@@ -62,26 +62,36 @@ _REGISTRY: dict[str, type] = {}
 
 
 def register_engine(name: str, *aliases: str) -> Callable[[type], type]:
-    """Class decorator: register an engine under ``name`` (+ aliases)."""
+    """Class decorator: register an engine under ``name`` (+ aliases).
+
+    The first name is canonical and is stamped on the class as
+    ``cls.engine_name`` so callers holding a class (or an alias) can recover
+    the one display/config name (benchmarks key workloads by it).
+    """
 
     def deco(cls: type) -> type:
         for key in (name, *aliases):
             if key in _REGISTRY and _REGISTRY[key] is not cls:
                 raise ValueError(f"engine name {key!r} already registered")
             _REGISTRY[key] = cls
+        cls.engine_name = name
         return cls
 
     return deco
 
 
 def get_engine(name: str) -> type:
-    """Look up an engine class by registered name or alias."""
-    try:
-        return _REGISTRY[name]
-    except KeyError:
+    """Look up an engine class by registered name or alias.
+
+    CLI-style underscores are accepted for any registered name
+    (``two_tier_cache`` == ``two-tier-cache``).
+    """
+    cls = _REGISTRY.get(name) or _REGISTRY.get(name.replace("_", "-"))
+    if cls is None:
         raise KeyError(
             f"unknown engine {name!r}; known: {sorted(_REGISTRY)}"
-        ) from None
+        )
+    return cls
 
 
 def create_engine(name: str, *args, **kwargs):

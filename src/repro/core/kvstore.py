@@ -47,8 +47,15 @@ __all__ = [
     "run_trace",
 ]
 
+# stacklevel=2 attributes the warning to the importing file: CPython's warn
+# walks past its own importlib frames when counting stack levels, so level 2
+# of a module body *is* the caller's ``import repro.core.kvstore`` line.
 warnings.warn(
-    "repro.core.kvstore is deprecated; import from repro.core.engines instead",
+    "repro.core.kvstore is deprecated: the engines live in "
+    "repro.core.engines (e.g. 'from repro.core.engines import LSMStore, "
+    "run_trace'); model/trace types moved to repro.core.latency_model / "
+    "repro.core.trace_ir / repro.core.workloads. See docs/ENGINES.md for "
+    "the migration map.",
     DeprecationWarning,
     stacklevel=2,
 )

@@ -2,8 +2,9 @@
 testbed"), as a layered package:
 
   * :mod:`.config`      -- :class:`SimConfig` / :class:`SimResult`
-  * :mod:`.devices`     -- memory-latency sampling, SSD token clocks,
-                           per-core prefetch queue + bandwidth throttle
+  * :mod:`.devices`     -- memory-latency sampling, per-SSD token clocks
+                           (``n_ssd`` devices, round-robin striping, switch
+                           fan-out hop), per-core prefetch queue + throttle
   * :mod:`.scheduler`   -- threads, cores, FIFO ready rings, parked heap
   * :mod:`.engine_loop` -- the generic event loop and the compiled
                            single-core fast loop over columnar traces
@@ -15,8 +16,9 @@ such hardware, so we reproduce the *measurement apparatus* in virtual time
 with exactly the paper's free parameters: N threads per core with strict
 FIFO scheduling and per-yield context-switch cost T_sw, software prefetch
 with per-core queue depth P, stall-on-incomplete-prefetch (the gray bars of
-Figs. 5 and 8), asynchronous IO gated by shared SSD bandwidth/IOPS token
-clocks, memory-bandwidth throttling, DRAM tiering, premature eviction,
+Figs. 5 and 8), asynchronous IO striped over one or more SSDs each gated by
+its own bandwidth/IOPS token clocks (plus an optional CXL-switch fan-out
+hop), memory-bandwidth throttling, DRAM tiering, premature eviction,
 tail-latency mixtures, and a global per-op critical section.
 
 Operations come from an ``OpSource`` callable (microbenchmark or legacy

@@ -34,8 +34,13 @@ class SimConfig:
                                   # this is what naturally misaligns threads,
                                   # Sec. 3.2.2 "timing ... will be mostly random")
     A_io: float = 1024.0
-    B_io: float = 0.0             # 0 disables
-    R_io: float = 0.0             # 0 disables
+    B_io: float = 0.0             # 0 disables; per device when n_ssd > 1
+    R_io: float = 0.0             # 0 disables; per device when n_ssd > 1
+    n_ssd: int = 1                # SSDs behind the IO path, each with its own
+                                  # IOPS/bandwidth token clocks; IOs are striped
+                                  # round-robin in submission order
+    L_switch: float = 0.0         # CXL/PCIe-switch fan-out hop added to every
+                                  # IO when the device pool hangs off a switch
     # Contention
     T_lock: float = 0.0
     seed: int = 0

@@ -233,8 +233,9 @@ def simulate_compiled(
     loop over ``trace_source(trace.to_ops())``; see module docstring).
 
     The specialization covers the single-core case with all device features
-    (eps, rho, latency mixtures, SSD clocks, memory throttle, T_lock);
-    multi-core configs fall back to :func:`simulate`.
+    (eps, rho, latency mixtures, per-SSD token clocks with ``n_ssd``
+    round-robin striping, the ``L_switch`` fan-out hop, memory throttle,
+    T_lock); multi-core configs fall back to :func:`simulate`.
     """
     if cfg.n_cores != 1:
         return simulate(cfg, trace.as_source(), n_ops, warmup_ops,
@@ -302,8 +303,16 @@ def simulate_compiled(
 
     pf_inflight: list[float] = []   # the single core's prefetch heap
     pf_bw_next = 0.0
-    io_tok_next = 0.0
-    io_bw_next = 0.0
+    # Per-SSD token clocks + the round-robin striping cursor (the inlined
+    # mirror of devices.SSDClocks; with n_ssd == 1 the arithmetic is the
+    # single-device model unchanged).
+    n_ssd = cfg.n_ssd
+    if n_ssd < 1:
+        raise ValueError(f"n_ssd must be >= 1, got {n_ssd}")
+    L_switch = cfg.L_switch
+    io_tok_next = [0.0] * n_ssd
+    io_bw_next = [0.0] * n_ssd
+    io_rr = 0
     lock_next = 0.0
 
     done = 0
@@ -379,19 +388,21 @@ def simulate_compiled(
 
         park_until = None
         if kind == 1 and not end_of_op:  # PREIO: submit the IO now
+            dev = io_rr % n_ssd
+            io_rr += 1
             svc = now
             if R_io > 0.0:
-                if io_tok_next > svc:
-                    svc = io_tok_next
-                io_tok_next = svc + 1.0 / R_io
+                if io_tok_next[dev] > svc:
+                    svc = io_tok_next[dev]
+                io_tok_next[dev] = svc + 1.0 / R_io
             if B_io > 0.0:
-                if io_bw_next > svc:
-                    svc = io_bw_next
-                io_bw_next = svc + A_io / B_io
+                if io_bw_next[dev] > svc:
+                    svc = io_bw_next[dev]
+                io_bw_next[dev] = svc + A_io / B_io
             lat_io = L_io
             if jitter > 0.0:
                 lat_io *= 1.0 + jitter * (2.0 * rrandom() - 1.0)
-            park_until = svc + lat_io
+            park_until = svc + lat_io + L_switch
 
         if kinds[i] == 0:  # next subop is MEM: issue its prefetch now
             pq = pf_inflight

@@ -4,6 +4,17 @@ The paper's execution model is N user-level threads per core on a strict
 FIFO ready ring, one context switch (T_sw) charged per suboperation yield,
 and threads parked off-core while their asynchronous IO is in flight.  This
 module holds those data structures; :mod:`.engine_loop` drives them.
+
+Division of labour with :mod:`.devices`: the scheduler owns *where a thread
+is* (on a ready ring, or in the parked heap keyed by its IO completion
+time), the device layer owns *when things finish* (prefetch completions and
+the per-device SSD token clocks).  The two meet at exactly two points --
+a PREIO suboperation parks its thread until ``SSDClocks.submit`` says the
+IO completes (on whichever SSD the round-robin stripe placed it), and a MEM
+suboperation stalls its thread until ``PrefetchUnit.issue``'s completion
+time.  Per-core state (ready ring, prefetch unit) is private to the core;
+the parked heap and the SSD clocks are shared across all cores, which is
+what makes multi-device IOPS an aggregate, machine-wide resource.
 """
 from __future__ import annotations
 

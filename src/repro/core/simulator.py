@@ -45,8 +45,15 @@ __all__ = [
     "best_over_threads",
 ]
 
+# stacklevel=2 attributes the warning to the importing file: CPython's warn
+# walks past its own importlib frames when counting stack levels, so level 2
+# of a module body *is* the caller's ``import repro.core.simulator`` line.
 warnings.warn(
-    "repro.core.simulator is deprecated; import from repro.core.sim instead",
+    "repro.core.simulator is deprecated: the simulation layer lives in "
+    "repro.core.sim (e.g. 'from repro.core.sim import SimConfig, simulate, "
+    "sweep_latency'); the compiled fast loop (simulate_compiled) and the "
+    "batched sweep pipeline (sweep_latency) are only exported there. "
+    "See docs/ENGINES.md for the migration map.",
     DeprecationWarning,
     stacklevel=2,
 )

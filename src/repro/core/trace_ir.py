@@ -15,12 +15,34 @@ Two representations exist:
     The original row-oriented form; kept for ad-hoc construction and
     backward compatibility.
   * :class:`CompiledTrace` -- the whole trace as three numpy columns
-    (``kinds``, ``durs``, ``bounds``).  ``bounds`` has ``n_ops + 1``
-    entries; op *i* spans ``kinds[bounds[i]:bounds[i+1]]``.  This is the
-    hot-path format: it is built once by :class:`repro.core.engines.trace.
-    Recorder`, summarized vectorized by ``TraceResult.op_params``, shipped
-    cheaply to worker processes, and replayed by the simulator's compiled
-    fast loop without per-op tuple churn.
+    (``kinds``, ``durs``, ``bounds``).  This is the hot-path format: built
+    once by :class:`repro.core.engines.trace.Recorder`, summarized
+    vectorized by ``TraceResult.op_params``, shipped cheaply to worker
+    processes, and replayed by the simulator's compiled fast loop without
+    per-op tuple churn.
+
+The columnar layout
+-------------------
+All suboperations of all operations are concatenated into two parallel flat
+arrays plus one offset array marking where each operation starts::
+
+    kinds  : int8[n_subops]     -- MEM/PREIO/POSTIO/CPU code per suboperation
+    durs   : float64[n_subops]  -- CPU seconds attached to that suboperation
+    bounds : int64[n_ops + 1]   -- bounds[i]:bounds[i+1] slices out op i
+
+For example, a get that chases two index pointers and reads one value from
+SSD, followed by a pure-cache-hit get, is::
+
+    kinds  = [MEM, MEM, PREIO, POSTIO, CPU,   MEM, MEM]
+    durs   = [0.1u, 0.1u, 1.5u, 0.2u, 0.3u,   0.1u, 0.1u]
+    bounds = [0,                          5,            7]
+
+``bounds[0] == 0``, ``bounds[-1] == n_subops``, and empty operations are
+disallowed -- every index in ``kinds`` belongs to exactly one op, so the
+replay loop needs no sentinel checks.  Note that ``durs`` never stores a
+*memory or IO latency*: those are device properties sampled at simulation
+time (the same trace is replayed at every point of a latency sweep); a MEM
+duration is only the CPU compute attached to the hop.
 
 This module deliberately has no dependency on either the engines or the
 simulator packages -- it is the neutral layer both import.

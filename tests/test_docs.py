@@ -1,0 +1,48 @@
+"""Docs stay runnable: the same checks the CI ``docs`` job runs via
+``tools/check_docs.py`` -- every python code block in README.md and
+docs/*.md executes, and every internal link resolves."""
+import importlib.util
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+spec = importlib.util.spec_from_file_location(
+    "check_docs", ROOT / "tools" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_docs)
+
+DOCS = check_docs.doc_files(ROOT)
+
+
+def test_docs_exist():
+    names = {p.name for p in DOCS}
+    assert "README.md" in names
+    assert "ENGINES.md" in names
+    assert "ARCHITECTURE.md" in names
+
+
+@pytest.mark.parametrize("path", DOCS, ids=[p.name for p in DOCS])
+def test_links_resolve(path):
+    assert check_docs.check_links(path) == []
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("path", DOCS, ids=[p.name for p in DOCS])
+def test_code_blocks_run(path):
+    assert check_docs.check_code_blocks(path) == []
+
+
+def test_checker_catches_breakage(tmp_path):
+    """The checker itself works: broken links and raising blocks are found."""
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    bad = docs / "BAD.md"
+    bad.write_text(
+        "see [missing](nope.md)\n\n```python\nraise RuntimeError('boom')\n```\n"
+        "\n```python no-run\nraise RuntimeError('never runs')\n```\n"
+    )
+    assert len(check_docs.check_links(bad)) == 1
+    problems = check_docs.check_code_blocks(bad)
+    assert len(problems) == 1 and "boom" in problems[0]

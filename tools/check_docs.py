@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Docs smoke-checker: run the code in the docs, resolve the links.
+
+Checks two things over ``README.md`` + ``docs/*.md``:
+
+1. **Code blocks run.**  Every fenced ```` ```python ```` block is executed
+   (doctest-style smoke): blocks within one file share a namespace, in
+   order, so a guide can build on earlier snippets.  A block whose fence
+   info string contains ``no-run`` (```` ```python no-run ````) is parsed
+   for syntax only.  Shell blocks are never executed.
+2. **Internal links resolve.**  Every relative markdown link target
+   (``[text](../src/...)``, anchors stripped) must exist on disk; http(s)/
+   mailto links are ignored.
+
+Exit code 0 iff everything passes; findings are printed one per line as
+``file:line: message``.  Run from the repo root with ``PYTHONPATH=src``:
+
+    PYTHONPATH=src python tools/check_docs.py
+
+The CI ``docs`` job runs exactly that; ``tests/test_docs.py`` runs the same
+checks in-process so the tier-1 suite catches doc rot too.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# ```python [info...]\n ... \n``` (tolerates indented closing fence)
+_FENCE = re.compile(
+    r"^```(?P<info>[^\n`]*)\n(?P<body>.*?)^[ \t]*```[ \t]*$",
+    re.S | re.M,
+)
+# [text](target) -- skips images' leading ! by matching the bracket pair only
+_LINK = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _rel(path: Path) -> str:
+    """Repo-relative display path (absolute for files outside the repo)."""
+    try:
+        return str(path.relative_to(REPO_ROOT))
+    except ValueError:
+        return str(path)
+
+
+def doc_files(root: Path = REPO_ROOT) -> list[Path]:
+    files = []
+    readme = root / "README.md"
+    if readme.exists():
+        files.append(readme)
+    files.extend(sorted((root / "docs").glob("*.md")))
+    return files
+
+
+def iter_python_blocks(text: str):
+    """Yield ``(line_number, info_string, source)`` per fenced python block."""
+    for m in _FENCE.finditer(text):
+        info = m.group("info").strip().lower()
+        if not info.startswith("python"):
+            continue
+        line = text.count("\n", 0, m.start()) + 1
+        yield line, info, m.group("body")
+
+
+def check_code_blocks(path: Path) -> list[str]:
+    """Execute every python block of one file in a shared namespace."""
+    problems = []
+    ns: dict = {"__name__": f"docs_check_{path.stem}"}
+    for line, info, src in iter_python_blocks(path.read_text()):
+        where = f"{_rel(path)}:{line}"
+        try:
+            code = compile(src, f"{where} (code block)", "exec")
+        except SyntaxError as e:
+            problems.append(f"{where}: syntax error in code block: {e}")
+            continue
+        if "no-run" in info:
+            continue
+        try:
+            exec(code, ns)  # noqa: S102 - the whole point of the checker
+        except Exception as e:  # noqa: BLE001
+            problems.append(
+                f"{where}: code block raised {type(e).__name__}: {e}"
+            )
+    return problems
+
+
+def check_links(path: Path) -> list[str]:
+    problems = []
+    text = path.read_text()
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            line = text.count("\n", 0, m.start()) + 1
+            problems.append(
+                f"{_rel(path)}:{line}: broken link -> {target}"
+            )
+    return problems
+
+
+def run(root: Path = REPO_ROOT) -> list[str]:
+    problems = []
+    for path in doc_files(root):
+        problems.extend(check_links(path))
+        problems.extend(check_code_blocks(path))
+    return problems
+
+
+def main() -> int:
+    files = doc_files()
+    problems = run()
+    for p in problems:
+        print(p)
+    print(
+        f"check_docs: {len(files)} files, "
+        f"{sum(len(list(iter_python_blocks(f.read_text()))) for f in files)} "
+        f"python blocks, {len(problems)} problem(s)"
+    )
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
