@@ -5,28 +5,32 @@ Every benchmark prints CSV rows ``name,us_per_call,derived`` where
 operation at the row's operating point and ``derived`` carries the
 figure-specific quantity (normalized throughput, model error, ...).
 
-Latency sweeps run through :func:`repro.core.sim.sweep_latency`: one
-compiled trace shared across the whole latency x threads grid, cells fanned
-out over worker processes.  ``benchmarks.run`` can point ``SWEEP_CACHE`` at
-a directory (``--sweep-cache``) to memoize finished cells across runs and
-``SWEEP_PROCESSES`` (``--processes``) at a worker count.
+Since the experiment-API redesign this module is a thin layer over
+:mod:`repro.core.experiment`: scenarios (engine + workload + device spec +
+sweep axes) are first-class library objects, the engine -> default-workload
+pairings live in :data:`repro.core.experiment.ENGINE_DEFAULTS`, and
+``benchmarks.run --engine/--devices/--scenario`` all execute through
+:class:`~repro.core.experiment.Experiment`.  What remains here:
 
-The engine x device matrix: any engine in the :mod:`repro.core.engines`
-registry can be swept against any device config via :func:`build_engine`
-(engine + its default paper-style workload) and :func:`matrix_sweep`
-(latency-tolerance curve per (engine, n_ssd) pair) -- this is what
-``benchmarks.run --engine NAME --devices N`` and the cross-engine figure
-drive.
+* :func:`emit` -- the CSV row format;
+* :func:`sweep_points` / :func:`sweep_trace` -- raw-source sweeps for the
+  microbenchmark figures (sources that are not engine scenarios);
+* :func:`run_options` -- the module-level ``SWEEP_PROCESSES`` /
+  ``SWEEP_CACHE`` globals (set by ``benchmarks.run`` flags) folded into a
+  :class:`~repro.core.experiment.RunOptions`;
+* deprecation shims (``ENGINE_DEFAULTS``, and delegating ``build_engine`` /
+  ``matrix_sweep`` wrappers) for pre-redesign callers.
 """
 from __future__ import annotations
 
+import warnings
+
 from repro.core import workloads
-from repro.core.engines import (
-    LSMStore,
-    TreeIndexStore,
-    TwoTierCacheStore,
-    get_engine,
-    run_trace,
+from repro.core.engines import get_engine, run_trace
+from repro.core.experiment import (
+    Experiment,
+    RunOptions,
+    default_scenario,
 )
 from repro.core.latency_model import US
 from repro.core.sim import SimConfig, sweep_latency
@@ -35,9 +39,17 @@ L_SWEEP_US = (0.1, 0.3, 0.5, 1, 2, 3, 5, 8, 10)
 N_CANDIDATES = (16, 24, 32, 48, 64)
 MATRIX_L_US = (0.1, 1, 3, 5, 8, 10)
 
-# Set by benchmarks.run from --processes / --sweep-cache.
+# Set by benchmarks.run from --processes / --sweep-cache; library code
+# should take a RunOptions instead (see run_options()).
 SWEEP_PROCESSES: int | None = None
 SWEEP_CACHE: str | None = None
+
+
+def run_options(**overrides) -> RunOptions:
+    """The benchmark CLI's sweep settings as a :class:`RunOptions`."""
+    kw = dict(processes=SWEEP_PROCESSES, cache_dir=SWEEP_CACHE)
+    kw.update(overrides)
+    return RunOptions(**kw)
 
 
 def emit(name: str, us_per_call: float, derived) -> None:
@@ -50,17 +62,20 @@ def sweep_points(source, l_us_list=L_SWEEP_US, candidates=N_CANDIDATES,
 
     Returns ``{l_us: SweepPoint}`` in input order.  ``source`` is anything
     :func:`sweep_latency` accepts (compiled trace, TraceResult, op list, or
-    a legacy callable source).
+    a legacy callable source) -- use this for figure sources that are not
+    engine scenarios (microbenchmarks, ad-hoc traces); engine sweeps should
+    go through :class:`repro.core.experiment.Experiment`.
     """
     cfg = SimConfig(P=P, seed=seed, **cfg_kw)
+    opts = run_options()
     pts = sweep_latency(
         cfg,
         source,
         [l_us * US for l_us in l_us_list],
         candidates,
         n_ops=n_ops,
-        processes=SWEEP_PROCESSES,
-        cache_dir=SWEEP_CACHE,
+        processes=opts.processes,
+        cache_dir=opts.cache_dir,
     )
     return dict(zip(l_us_list, pts))
 
@@ -75,43 +90,51 @@ def sweep_trace(src, l_us_list=L_SWEEP_US, n_ops=5000, P=12, seed=7, **cfg_kw):
 
 # -- the engine axis ---------------------------------------------------------
 
-# Default (paper Table 5-ish) workload and constructor kwargs per canonical
-# engine name.  Workload factories take (n_keys, n_ops).
-ENGINE_DEFAULTS = {
-    "tree-index": (
-        dict(seed=1),
-        lambda nk, nops: workloads.uniform(nk, nops, (1, 0), seed=2),
-    ),
-    "lsm": (
-        dict(),
-        lambda nk, nops: workloads.zipf(nk, nops, 0.99, (1, 0), seed=3),
-    ),
-    "two-tier-cache": (
-        dict(seed=4),
-        lambda nk, nops: workloads.gaussian(nk, nops, 0.08, (2, 1), seed=5),
-    ),
-    "hash-index": (
-        dict(seed=6),
-        lambda nk, nops: workloads.uniform(nk, nops, (1, 0), seed=2),
-    ),
-    "slab-cache": (
-        dict(seed=8),
-        lambda nk, nops: workloads.zipf(nk, nops, 0.9, (3, 1), seed=8),
-    ),
-}
+# Legacy-format engine -> (ctor kwargs, workload factory(nk, nops)) table,
+# materialized once from the library pairings.  Kept mutable and consulted
+# by build_engine so the pre-redesign registration pattern ("add an entry
+# to benchmarks.common.ENGINE_DEFAULTS") keeps affecting sweeps; new code
+# should edit repro.core.experiment.ENGINE_DEFAULTS instead.
+_LEGACY_DEFAULTS: dict | None = None
+_LEGACY_PRISTINE: dict = {}
+
+
+def _legacy_defaults() -> dict:
+    global _LEGACY_DEFAULTS
+    if _LEGACY_DEFAULTS is None:
+        from repro.core.experiment import ENGINE_DEFAULTS
+        from repro.core.workloads import create_workload
+
+        _LEGACY_DEFAULTS = {
+            eng: (dict(ekw),
+                  lambda nk, nops, _w=wname, _k=wkw: create_workload(
+                      _w, nk, nops, **_k))
+            for eng, (ekw, wname, wkw) in ENGINE_DEFAULTS.items()
+        }
+        _LEGACY_PRISTINE.update(_LEGACY_DEFAULTS)
+    return _LEGACY_DEFAULTS
+
+
+def _legacy_override(canonical: str) -> bool:
+    """True iff legacy code replaced this engine's entry in the deprecated
+    ``ENGINE_DEFAULTS`` table (the entries are compared by identity against
+    the snapshot taken when the table was first materialized)."""
+    return (_LEGACY_DEFAULTS is not None and
+            _LEGACY_DEFAULTS.get(canonical) is not
+            _LEGACY_PRISTINE.get(canonical))
 
 
 def build_engine(name: str, nk: int = 100_000, nops: int = 30_000):
     """One registered engine + its default workload, by any registry name.
 
-    Accepts canonical names, aliases, and CLI-style underscores
-    (``hash_index``); unknown engines raise ``KeyError`` listing what is
-    registered.
+    Legacy spelling of :func:`repro.core.experiment.build_engine`; the only
+    difference is that it honors entries added to the deprecated
+    ``benchmarks.common.ENGINE_DEFAULTS`` table.
     """
     cls = get_engine(name)
-    canonical = cls.engine_name
-    kwargs, wl_factory = ENGINE_DEFAULTS.get(
-        canonical, (dict(), lambda nk, nops: workloads.uniform(nk, nops, (1, 0), seed=2))
+    kwargs, wl_factory = _legacy_defaults().get(
+        cls.engine_name,
+        (dict(), lambda nk, nops: workloads.uniform(nk, nops, (1, 0), seed=2)),
     )
     return cls(nk, **kwargs), wl_factory(nk, nops)
 
@@ -157,19 +180,52 @@ def matrix_sweep(engine: str, n_ssd: int = 1, l_us_list=MATRIX_L_US,
                  R_io: float = 250e3, L_switch_us: float = 0.3):
     """Latency-tolerance sweep of one (engine, device-count) matrix cell.
 
-    Returns ``(trace_result, {l_us: SweepPoint})``.  Device defaults give
-    each SSD a 250 kIOPS random-read token clock -- one device caps the
-    IO-richest engines (hash index runs every get through the SSD) while
-    two devices free them, so the figure shows both axes: device count
-    lifts IOPS-bound curves, memory latency bends the unbound ones.  Pools
-    with ``n_ssd > 1`` also pay a 0.3 us switch fan-out hop per IO.
+    Shim over the experiment layer: builds the equivalent
+    :class:`~repro.core.experiment.Scenario` (via :func:`default_scenario`)
+    and runs it, so its sweep points are bit-identical to
+    ``Experiment(default_scenario(engine, n_ssd=n_ssd)).run()``.  Returns
+    the legacy ``(trace_result, {l_us: SweepPoint})`` shape.
+
+    Pre-redesign mutation-based registration is still honored: if legacy
+    code replaced this engine's entry in the deprecated
+    ``ENGINE_DEFAULTS`` table, the sweep runs the mutated pairing through
+    the pre-redesign inline protocol instead of the library scenario.
     """
-    store, wl = build_engine(engine, nk, nops)
-    tr = run_trace(store, wl)
-    cfg = device_config(n_ssd=n_ssd, R_io=R_io, L_switch_us=L_switch_us,
-                        P=12, seed=seed)
-    pts = sweep_latency(
-        cfg, tr.trace, [l_us * US for l_us in l_us_list], candidates,
-        n_ops=n_ops, processes=SWEEP_PROCESSES, cache_dir=SWEEP_CACHE,
+    canonical = get_engine(engine).engine_name
+    if _legacy_override(canonical):
+        store, wl = build_engine(engine, nk, nops)
+        tr = run_trace(store, wl)
+        cfg = device_config(n_ssd=n_ssd, R_io=R_io,
+                            L_switch_us=L_switch_us, P=12, seed=seed)
+        opts = run_options()
+        pts = sweep_latency(
+            cfg, tr.trace, [l_us * US for l_us in l_us_list], candidates,
+            n_ops=n_ops, processes=opts.processes, cache_dir=opts.cache_dir,
+        )
+        return tr, dict(zip(l_us_list, pts))
+    sc = default_scenario(
+        engine, n_ssd=n_ssd, latencies_us=tuple(l_us_list),
+        thread_candidates=tuple(candidates), n_keys=nk, n_wl_ops=nops,
+        n_ops=n_ops, seed=seed, R_io=R_io, L_switch_us=L_switch_us,
     )
-    return tr, dict(zip(l_us_list, pts))
+    art = Experiment(sc, run_options()).run()
+    return art.trace_result, dict(zip(l_us_list, art.points))
+
+
+def __getattr__(name):
+    if name == "ENGINE_DEFAULTS":
+        warnings.warn(
+            "benchmarks.common.ENGINE_DEFAULTS moved into the library; "
+            "migration map: ENGINE_DEFAULTS -> "
+            "repro.core.experiment.ENGINE_DEFAULTS (now "
+            "{engine: (engine_kwargs, workload_name, workload_kwargs)} "
+            "with workloads resolved via the repro.core.workloads "
+            "registry); build_engine -> repro.core.experiment.build_engine",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        # One persistent dict: legacy mutation-based registration
+        # (common.ENGINE_DEFAULTS["my-engine"] = (kwargs, factory)) still
+        # affects this module's build_engine/build_engines.
+        return _legacy_defaults()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.core import workloads
 from repro.core.engines import LSMStore, TreeIndexStore, TwoTierCacheStore, run_trace
+from repro.core.experiment import Experiment, default_scenario
 from repro.core.latency_model import (
     US,
     OpParams,
@@ -41,7 +42,7 @@ from .common import (
     build_engines,
     emit,
     engine_trace,
-    matrix_sweep,
+    run_options,
     sweep_points,
 )
 
@@ -296,22 +297,24 @@ def fig13_engine_matrix() -> None:
     IO-rich engines (hash index: S=1) stay near-flat out to 10 us while
     cache engines with high hit rates (few IOs to hide behind) degrade
     fastest; doubling the SSDs moves every IOPS-bound curve up without
-    changing its latency-tolerance shape."""
+    changing its latency-tolerance shape.  Each cell is one declarative
+    scenario through the public experiment API."""
     lats = (0.1, 1, 5, 10)
     cands = (24, 40, 56)
     for engine in ("tree-index", "lsm", "two-tier-cache", "hash-index",
                    "slab-cache"):
         for n_ssd in (1, 2):
-            tr, pts = matrix_sweep(engine, n_ssd=n_ssd, l_us_list=lats,
-                                   candidates=cands, n_ops=4000)
-            base = pts[lats[0]].throughput
-            for l_us, pt in pts.items():
-                emit(f"fig13/{engine}/ssd{n_ssd}/L{l_us}us",
-                     1e6 / pt.throughput,
-                     f"norm={pt.throughput / base:.4f}")
-            d10 = 1 - pts[10].throughput / base
+            sc = default_scenario(engine, n_ssd=n_ssd, latencies_us=lats,
+                                  thread_candidates=cands, n_ops=4000)
+            art = Experiment(sc, run_options()).run()
+            base = art.baseline_throughput
+            for row in art.rows:
+                emit(f"fig13/{engine}/ssd{n_ssd}/{row.label()}",
+                     1e6 / row.throughput,
+                     f"norm={row.throughput / base:.4f}")
+            d10 = 1 - art.rows[-1].throughput / base
             emit(f"fig13/{engine}/ssd{n_ssd}/degradation_at_10us", 0.0,
-                 f"d={d10:.4f};S={tr.io_per_op:.3f};M={tr.mem_per_op:.2f}")
+                 f"d={d10:.4f};S={art.S:.3f};M={art.M:.2f}")
 
 
 ALL = [

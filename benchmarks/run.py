@@ -4,17 +4,27 @@
 ``python -m benchmarks.run``            -- paper figures + kernels + roofline
 ``python -m benchmarks.run --only fig11``
 ``python -m benchmarks.run --only fig11 --processes 4 --sweep-cache .sweep_cache``
+``python -m benchmarks.run --scenario examples/scenarios/hash_index_2ssd.json``
+                                        -- one declarative scenario through
+                                           the public experiment API
 ``python -m benchmarks.run --engine hash_index --devices 2``
-                                        -- latency-tolerance sweep of one
-                                           registered engine on N SSDs
+                                        -- sugar: builds the default matrix
+                                           scenario for one engine on N SSDs
+``python -m benchmarks.run --list-engines``  / ``--list-workloads``
+                                        -- canonical registry names valid in
+                                           scenario specs
 
 Latency sweeps go through the batched :func:`repro.core.sim.sweep_latency`
-pipeline; ``--processes`` sets the worker-process count for the grid and
+pipeline; ``--processes`` sets the worker-process count for the grid,
 ``--sweep-cache`` memoizes finished sweep cells on disk so repeated runs
-only simulate what changed.  ``--engine`` accepts any name or alias in the
-``repro.core.engines`` registry (underscores work: ``hash_index`` ==
-``hash-index``); ``--devices`` sets the simulated SSD count (per-device
-IOPS token clocks, round-robin striping, switch fan-out hop).
+only simulate what changed, and ``--adaptive`` warm-starts the per-point
+thread search from the previous latency point's winner.  ``--artifact``
+writes the scenario run's full :class:`~repro.core.experiment.RunArtifact`
+(sweep table + trace stats + model predictions + config provenance) as
+JSON.  ``--engine`` accepts any name or alias in the ``repro.core.engines``
+registry (underscores work: ``hash_index`` == ``hash-index``); ``--devices``
+sets the simulated SSD count (per-device IOPS token clocks, round-robin
+striping, switch fan-out hop).
 """
 from __future__ import annotations
 
@@ -24,29 +34,70 @@ import time
 import traceback
 
 
-def run_engine_matrix(engine: str, devices: int) -> None:
-    """One engine x device matrix cell as a full latency-tolerance sweep."""
+def _list_registry(kind: str) -> None:
+    """Print canonical registry names, one per line (aliases omitted --
+    these are the values valid in scenario specs)."""
+    if kind == "engines":
+        from repro.core.engines import available_engines
+
+        names = sorted({cls.engine_name for cls in
+                        available_engines().values()})
+    else:
+        from repro.core.workloads import available_workloads
+
+        names = sorted({fn.workload_name for fn in
+                        available_workloads().values()})
+    for name in names:
+        print(name)
+
+
+def emit_artifact(art, prefix: str) -> None:
+    """Print one scenario artifact in the benchmark CSV row format."""
+    from . import common
+
+    base = art.baseline_throughput
+    for row in art.rows:
+        derived = (f"norm={row.throughput / base:.4f};"
+                   f"threads={row.n_threads};"
+                   f"model_kops={row.model_throughput / 1e3:.1f}")
+        if row.mean_op_latency_us is not None:
+            derived += f";op_latency_us={row.mean_op_latency_us:.3f}"
+        common.emit(f"{prefix}/{row.label()}", 1e6 / row.throughput, derived)
+    last = art.rows[-1]
+    common.emit(
+        f"{prefix}/summary",
+        0.0,
+        f"degradation_at_{last.label()[1:]}="
+        f"{1 - last.throughput / base:.4f};"
+        f"S={art.S:.3f};M={art.M:.2f}",
+    )
+
+
+def run_scenario_cmd(scenario, artifact_out: str | None,
+                     collect_latency: bool, adaptive: bool,
+                     prefix: str | None = None) -> None:
+    """Execute one scenario through the public experiment API."""
+    from repro.core.experiment import Experiment
+
     from . import common
 
     try:
-        tr, pts = common.matrix_sweep(engine, n_ssd=devices)
-    except KeyError as e:  # unknown engine: get_engine lists what exists
-        sys.exit(str(e.args[0]) if e.args else str(e))
-    base = None
-    for l_us, pt in pts.items():
-        base = base or pt.throughput
-        common.emit(
-            f"matrix/{engine}/ssd{devices}/L{l_us}us",
-            1e6 / pt.throughput,
-            f"norm={pt.throughput / base:.4f};threads={pt.n_threads}",
-        )
-    l_last = list(pts)[-1]
-    common.emit(
-        f"matrix/{engine}/ssd{devices}/summary",
-        0.0,
-        f"degradation_at_{l_last}us={1 - pts[l_last].throughput / base:.4f};"
-        f"S={tr.io_per_op:.3f};M={tr.mem_per_op:.2f}",
-    )
+        # display_name resolves the engine too: unknown names fail here,
+        # before the (expensive) run, with the registry listing
+        prefix = prefix or f"scenario/{scenario.display_name}"
+        art = Experiment(
+            scenario,
+            common.run_options(collect_latency=collect_latency,
+                               adaptive=adaptive),
+        ).run()
+    except KeyError as e:  # unknown engine/workload: resolution is lazy and
+        sys.exit(str(e.args[0]) if e.args else str(e))  # lists what exists
+    emit_artifact(art, prefix)
+    if artifact_out:
+        with open(artifact_out, "w") as f:
+            f.write(art.to_json())
+        print(f"{prefix}/artifact,0.0000,wrote={artifact_out}",
+              file=sys.stderr)
 
 
 def main() -> None:
@@ -57,12 +108,37 @@ def main() -> None:
     ap.add_argument("--sweep-cache", default=None, metavar="DIR",
                     help="directory memoizing finished sweep cells "
                          "(e.g. .sweep_cache)")
+    ap.add_argument("--scenario", default=None, metavar="SPEC.json",
+                    help="run one declarative scenario spec through the "
+                         "experiment API instead of the paper figures")
+    ap.add_argument("--artifact", default=None, metavar="OUT.json",
+                    help="with --scenario/--engine: write the RunArtifact "
+                         "(sweep table + provenance) as JSON")
+    ap.add_argument("--collect-latency", action="store_true",
+                    help="with --scenario/--engine: record per-op latencies "
+                         "(bypasses the sweep cache)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="with --scenario/--engine: warm-started thread "
+                         "search instead of the full grid (cells run "
+                         "serially; --processes has no effect)")
     ap.add_argument("--engine", default=None, metavar="NAME",
-                    help="sweep one registered engine instead of the paper "
-                         "figures (any registry name/alias, e.g. hash_index)")
+                    help="sugar for --scenario: sweep one registered "
+                         "engine's default matrix scenario (any registry "
+                         "name/alias, e.g. hash_index)")
     ap.add_argument("--devices", type=int, default=1, metavar="N",
                     help="simulated SSD count for --engine (default 1)")
+    ap.add_argument("--list-engines", action="store_true",
+                    help="print canonical engine registry names and exit")
+    ap.add_argument("--list-workloads", action="store_true",
+                    help="print canonical workload registry names and exit")
     args = ap.parse_args()
+
+    if args.list_engines:
+        _list_registry("engines")
+        return
+    if args.list_workloads:
+        _list_registry("workloads")
+        return
 
     from . import common
 
@@ -71,10 +147,34 @@ def main() -> None:
 
     print("name,us_per_call,derived")
 
+    if args.scenario is not None:
+        from repro.core.experiment import Scenario
+
+        try:
+            with open(args.scenario) as f:
+                spec = f.read()
+        except OSError as e:
+            sys.exit(f"cannot read scenario spec: {e}")
+        try:
+            scenario = Scenario.from_json(spec)
+        except (ValueError, TypeError, KeyError) as e:
+            sys.exit(f"bad scenario spec {args.scenario!r}: {e}")
+        run_scenario_cmd(scenario, args.artifact, args.collect_latency,
+                         args.adaptive)
+        return
+
     if args.engine is not None:
         if args.devices < 1:
             sys.exit("--devices must be >= 1")
-        run_engine_matrix(args.engine, args.devices)
+        from repro.core.experiment import default_scenario
+
+        try:
+            scenario = default_scenario(args.engine, n_ssd=args.devices)
+        except KeyError as e:  # unknown engine: get_engine lists what exists
+            sys.exit(str(e.args[0]) if e.args else str(e))
+        run_scenario_cmd(scenario, args.artifact, args.collect_latency,
+                         args.adaptive,
+                         prefix=f"matrix/{args.engine}/ssd{args.devices}")
         return
 
     from . import kernels_bench, paper_figs, roofline_table

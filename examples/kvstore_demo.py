@@ -6,6 +6,7 @@ import numpy as np
 
 from repro.core import workloads
 from repro.core.engines import LSMStore, TreeIndexStore, create_engine, run_trace
+from repro.core.experiment import Experiment, RunArtifact, Scenario
 from repro.core.latency_model import US, theta_mask_inv, theta_prob_inv
 from repro.core.sim import SimConfig, microbenchmark_source, sweep_latency
 from repro.core.tiering import FLASH_CXL
@@ -58,3 +59,23 @@ for n_ssd in (1, 2):
     thr = [pt.throughput / 1e3 for pt in pts]
     print(f"  hash-index x {n_ssd} SSD: {thr[0]:6.1f}k -> {thr[1]:6.1f}k "
           f"at 10us ({thr[1] / thr[0]:.0%} kept)")
+
+print("O7: the whole protocol as one declarative, serializable scenario")
+print("    (the public experiment API; same spec format as")
+print("    examples/scenarios/*.json and `benchmarks.run --scenario`):")
+scenario = Scenario(
+    engine="slab-cache",                  # any registry name or alias
+    workload="zipf",                      # any workload-registry name
+    workload_kwargs={"exponent": 0.9, "read_write": (3, 1), "seed": 8},
+    n_keys=30_000, n_wl_ops=12_000,
+    n_ssd=2, R_io=250e3, L_switch_us=0.3,
+    latencies_us=(0.1, 5, 10), thread_candidates=(16, 32, 48), n_ops=3000,
+)
+art = Experiment(scenario).run()          # trace once, sweep, model-compare
+art = RunArtifact.from_json(art.to_json())   # artifacts round-trip as JSON
+print(f"  {art.engine} x {scenario.n_ssd} SSD: S={art.S:.2f} IOs/op, "
+      f"M={art.M:.1f} hops/op")
+for row, norm in zip(art.rows, art.normalized()):
+    print(f"  {row.label():>8}: sim {row.throughput / 1e3:7.1f}k "
+          f"({norm:.0%} of DRAM)  model {row.model_throughput / 1e3:7.1f}k "
+          f"[N={row.n_threads}]")

@@ -9,11 +9,25 @@
     for the FPGA testbed, plus the batched latency-sweep pipeline
   * :mod:`repro.core.latency_model` -- the paper's closed-form models,
     reused by the planner and the TPU serving engine
+  * :mod:`repro.core.experiment`   -- the public entry point: declarative
+    :class:`~repro.core.experiment.Scenario` specs (engine + workload by
+    registry name, device spec, sweep axes), executed by
+    :class:`~repro.core.experiment.Experiment` into serializable
+    :class:`~repro.core.experiment.RunArtifact` sweep tables
 
 ``repro.core.kvstore`` and ``repro.core.simulator`` remain as deprecation
 shims over the engines and sim packages.
 """
-from . import engines, latency_model, planner, sim, tiering, trace_ir, workloads  # noqa: F401
+from . import (  # noqa: F401
+    engines,
+    experiment,
+    latency_model,
+    planner,
+    sim,
+    tiering,
+    trace_ir,
+    workloads,
+)
 
 
 def __getattr__(name):
@@ -45,4 +59,12 @@ from .sim import (  # noqa: F401
     simulate,
     simulate_compiled,
     sweep_latency,
+)
+from .experiment import (  # noqa: F401
+    Experiment,
+    RunArtifact,
+    RunOptions,
+    Scenario,
+    default_scenario,
+    run_scenario,
 )

@@ -70,10 +70,12 @@ def _coerce_trace(source) -> tuple[CompiledTrace | None, Callable | None]:
 
 
 def _run_cell(cfg: SimConfig, trace, src_fn, n_ops: int,
-              warmup_ops: int | None) -> SimResult:
+              warmup_ops: int | None,
+              collect_latency: bool = False) -> SimResult:
     if trace is not None:
-        return simulate_compiled(cfg, trace, n_ops, warmup_ops)
-    return simulate(cfg, src_fn, n_ops, warmup_ops)
+        return simulate_compiled(cfg, trace, n_ops, warmup_ops,
+                                 collect_latency)
+    return simulate(cfg, src_fn, n_ops, warmup_ops, collect_latency)
 
 
 # -- worker-process plumbing -------------------------------------------------
@@ -81,15 +83,16 @@ def _run_cell(cfg: SimConfig, trace, src_fn, n_ops: int,
 _WORKER_STATE: dict = {}
 
 
-def _worker_init(trace, src_fn, n_ops, warmup_ops):
-    _WORKER_STATE["args"] = (trace, src_fn, n_ops, warmup_ops)
+def _worker_init(trace, src_fn, n_ops, warmup_ops, collect_latency):
+    _WORKER_STATE["args"] = (trace, src_fn, n_ops, warmup_ops,
+                             collect_latency)
     if trace is not None:
         trace.as_lists()   # pay the one-time columnar->list cost per worker
 
 
 def _worker_run(cfg: SimConfig) -> SimResult:
-    trace, src_fn, n_ops, warmup_ops = _WORKER_STATE["args"]
-    return _run_cell(cfg, trace, src_fn, n_ops, warmup_ops)
+    trace, src_fn, n_ops, warmup_ops, collect_latency = _WORKER_STATE["args"]
+    return _run_cell(cfg, trace, src_fn, n_ops, warmup_ops, collect_latency)
 
 
 def _pick_context(trace, src_fn):
@@ -120,6 +123,10 @@ def _pick_context(trace, src_fn):
 
 # -- on-disk cell cache ------------------------------------------------------
 
+# op_latencies / load_stalls are deliberately NOT cached (they are large and
+# rarely wanted); any call that needs them must bypass the cache entirely --
+# otherwise a cache hit would silently return mean_op_latency == 0 where a
+# cold run would not (see sweep_latency's ``use_cache`` predicate).
 _CACHED_FIELDS = ("ops", "time", "throughput", "mem_stall_total",
                   "mem_accesses")
 
@@ -151,6 +158,20 @@ def _cache_store(path: str, r: SimResult) -> None:
         pass
 
 
+def _make_point(L, candidates: list[int],
+                evals: dict[int, SimResult]) -> SweepPoint:
+    """Reduce evaluated cells of one latency point (lowest index wins ties,
+    matching the full grid's first-candidate-wins rule)."""
+    best_j = min(evals, key=lambda j: (-evals[j].throughput, j))
+    return SweepPoint(
+        L_mem=L,
+        n_threads=candidates[best_j],
+        result=evals[best_j],
+        per_thread={candidates[j]: evals[j].throughput
+                    for j in sorted(evals)},
+    )
+
+
 def sweep_latency(
     cfg: SimConfig,
     source,
@@ -160,6 +181,8 @@ def sweep_latency(
     warmup_ops: int | None = None,
     processes: int | None = None,
     cache_dir: str | os.PathLike | None = None,
+    collect_latency: bool = False,
+    adaptive: bool = False,
 ) -> list[SweepPoint]:
     """Throughput vs. memory latency with per-point thread optimization.
 
@@ -191,7 +214,25 @@ def sweep_latency(
     cache_dir
         If set, finished cells are memoized as small JSON files keyed by
         (config, trace digest, n_ops); repeated sweeps only simulate new
-        cells.  Histogram/latency collection is never cached.
+        cells.  Histogram/latency collection is never cached: a
+        ``collect_latency=True`` (or ``cfg.collect_load_hist``) call
+        bypasses the cache entirely -- loads *and* stores -- because the
+        cached cells drop ``op_latencies``/``load_stalls`` and a cache hit
+        would silently return ``mean_op_latency == 0``.
+    collect_latency
+        Record per-op latencies in every cell (``SimResult.op_latencies``),
+        e.g. for Fig. 17-style latency curves.  Disables the cell cache.
+    adaptive
+        Warm-started thread search: the first latency point evaluates the
+        full candidate list; every later point starts from the previous
+        point's winner and only expands to neighboring candidates while the
+        running best sits on the edge of the evaluated window.  Picks the
+        same winner as the full grid whenever throughput vs. thread count
+        is unimodal over the candidate list (the paper-sweep shape; see
+        ``tests/test_sweep.py``), while evaluating far fewer cells.  Cells
+        run serially (later points depend on earlier winners), so
+        ``processes`` is ignored; ``per_thread`` only contains the
+        candidates actually evaluated.
 
     Returns one :class:`SweepPoint` per latency, in input order.
     """
@@ -200,6 +241,26 @@ def sweep_latency(
     if not latencies or not candidates:
         return []
     trace, src_fn = _coerce_trace(source)
+
+    use_cache = (cache_dir is not None and trace is not None
+                 and not cfg.collect_load_hist and not collect_latency)
+    digest = ""
+    if use_cache:
+        os.makedirs(cache_dir, exist_ok=True)
+        digest = hashlib.sha1(
+            trace.kinds.tobytes() + trace.durs.tobytes() +
+            trace.bounds.tobytes()
+        ).hexdigest()
+
+    def cell_path(c: SimConfig) -> str:
+        return os.path.join(
+            str(cache_dir), _cache_key(c, digest, n_ops, warmup_ops) + ".json")
+
+    if adaptive:
+        return _sweep_adaptive(cfg, trace, src_fn, latencies, candidates,
+                               n_ops, warmup_ops, collect_latency,
+                               use_cache, cell_path)
+
     grid_cfgs = [
         replace(cfg, L_mem=L, n_threads=n)
         for L in latencies
@@ -207,19 +268,11 @@ def sweep_latency(
     ]
 
     # -- cache probe ---------------------------------------------------------
-    use_cache = (cache_dir is not None and trace is not None
-                 and not cfg.collect_load_hist)
     paths: list[str | None] = [None] * len(grid_cfgs)
     results: list[SimResult | None] = [None] * len(grid_cfgs)
     if use_cache:
-        os.makedirs(cache_dir, exist_ok=True)
-        digest = hashlib.sha1(
-            trace.kinds.tobytes() + trace.durs.tobytes() +
-            trace.bounds.tobytes()
-        ).hexdigest()
         for i, c in enumerate(grid_cfgs):
-            paths[i] = os.path.join(
-                str(cache_dir), _cache_key(c, digest, n_ops, warmup_ops) + ".json")
+            paths[i] = cell_path(c)
             results[i] = _cache_load(paths[i])
 
     todo = [i for i, r in enumerate(results) if r is None]
@@ -237,7 +290,7 @@ def sweep_latency(
             with ctx.Pool(
                 min(processes, len(todo)),
                 initializer=_worker_init,
-                initargs=(trace, src_fn, n_ops, warmup_ops),
+                initargs=(trace, src_fn, n_ops, warmup_ops, collect_latency),
                 maxtasksperchild=1 if src_fn is not None else None,
             ) as pool:
                 for i, r in zip(todo,
@@ -248,25 +301,70 @@ def sweep_latency(
         else:
             for i in todo:
                 results[i] = _run_cell(grid_cfgs[i], trace, src_fn, n_ops,
-                                       warmup_ops)
+                                       warmup_ops, collect_latency)
         if use_cache:
             for i in todo:
                 _cache_store(paths[i], results[i])
 
     # -- reduce: best thread count per latency (first candidate wins ties) ---
-    out: list[SweepPoint] = []
     k = len(candidates)
-    for li, L in enumerate(latencies):
-        cell = results[li * k:(li + 1) * k]
-        per_thread = {n: r.throughput for n, r in zip(candidates, cell)}
-        best_j = 0
-        for j in range(1, k):
-            if cell[j].throughput > cell[best_j].throughput:
-                best_j = j
-        out.append(SweepPoint(
-            L_mem=L,
-            n_threads=candidates[best_j],
-            result=cell[best_j],
-            per_thread=per_thread,
-        ))
+    return [
+        _make_point(L, candidates,
+                    dict(enumerate(results[li * k:(li + 1) * k])))
+        for li, L in enumerate(latencies)
+    ]
+
+
+def _sweep_adaptive(cfg, trace, src_fn, latencies, candidates, n_ops,
+                    warmup_ops, collect_latency, use_cache,
+                    cell_path) -> list[SweepPoint]:
+    """Warm-started hill search over the candidate list, one point at a time.
+
+    Invariant per latency point: the evaluated window ``[lo, hi]`` always
+    contains the previous point's winner, and is expanded while the current
+    best sits on a window edge -- so on a unimodal throughput-vs-threads
+    curve the search provably reaches the global grid winner.
+    """
+
+    def eval_cell(c: SimConfig) -> SimResult:
+        if use_cache:
+            path = cell_path(c)
+            r = _cache_load(path)
+            if r is not None:
+                return r
+        r = _run_cell(c, trace, src_fn, n_ops, warmup_ops, collect_latency)
+        if use_cache:
+            _cache_store(path, r)
+        return r
+
+    def argmax(evals: dict[int, SimResult]) -> int:
+        return min(evals, key=lambda j: (-evals[j].throughput, j))
+
+    k = len(candidates)
+    out: list[SweepPoint] = []
+    prev: int | None = None
+    for L in latencies:
+        evals: dict[int, SimResult] = {}
+        if prev is None:                       # first point: full grid
+            for j in range(k):
+                evals[j] = eval_cell(replace(cfg, L_mem=L,
+                                             n_threads=candidates[j]))
+        else:
+            lo, hi = max(prev - 1, 0), min(prev + 1, k - 1)
+            for j in range(lo, hi + 1):
+                evals[j] = eval_cell(replace(cfg, L_mem=L,
+                                             n_threads=candidates[j]))
+            best = argmax(evals)
+            while best == lo and lo > 0:
+                lo -= 1
+                evals[lo] = eval_cell(replace(cfg, L_mem=L,
+                                              n_threads=candidates[lo]))
+                best = argmax(evals)
+            while best == hi and hi < k - 1:
+                hi += 1
+                evals[hi] = eval_cell(replace(cfg, L_mem=L,
+                                              n_threads=candidates[hi]))
+                best = argmax(evals)
+        prev = argmax(evals)
+        out.append(_make_point(L, candidates, evals))
     return out

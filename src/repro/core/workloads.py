@@ -3,15 +3,31 @@
 The paper drives Aerospike with uniform / Zipf-1.1 keys, RocksDB with
 Zipf-0.99 / Zipf-0.8, and CacheLib with Gaussian and the CacheBench
 "graph cache leader" key distribution; read:write mixes are 1:0, 2:1, 1:1.
+
+Generators self-register in a registry mirroring the engine registry in
+:mod:`repro.core.engines.base`: :func:`get_workload` resolves canonical
+names, aliases, and CLI-style underscores, and :func:`create_workload`
+instantiates by name -- which is what lets a declarative
+:class:`~repro.core.experiment.Scenario` name its workload as plain data.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator
+from typing import Callable, Iterator
 
 import numpy as np
 
-__all__ = ["Workload", "uniform", "zipf", "gaussian", "graph_cache_leader"]
+__all__ = [
+    "Workload",
+    "uniform",
+    "zipf",
+    "gaussian",
+    "graph_cache_leader",
+    "register_workload",
+    "get_workload",
+    "create_workload",
+    "available_workloads",
+]
 
 
 @dataclass(frozen=True)
@@ -30,6 +46,57 @@ class Workload:
         return zip(self.keys.tolist(), self.is_write.tolist())
 
 
+# ---------------------------------------------------------------------------
+# Registry (mirrors the engine registry in repro.core.engines.base)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[..., Workload]] = {}
+
+
+def register_workload(name: str, *aliases: str) -> Callable[[Callable], Callable]:
+    """Decorator: register a workload factory under ``name`` (+ aliases).
+
+    The first name is canonical and is stamped on the factory as
+    ``fn.workload_name`` so callers holding an alias can recover the one
+    display/config name (scenario specs serialize it).  Factories take
+    ``(n_keys, n_ops, **kwargs)`` and return a :class:`Workload`.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        for key in (name, *aliases):
+            if key in _REGISTRY and _REGISTRY[key] is not fn:
+                raise ValueError(f"workload name {key!r} already registered")
+            _REGISTRY[key] = fn
+        fn.workload_name = name
+        return fn
+
+    return deco
+
+
+def get_workload(name: str) -> Callable[..., Workload]:
+    """Look up a workload factory by registered name or alias.
+
+    CLI-style underscores are accepted for any registered name
+    (``graph_cache_leader`` == ``graph-cache-leader``).
+    """
+    fn = _REGISTRY.get(name) or _REGISTRY.get(name.replace("_", "-"))
+    if fn is None:
+        raise KeyError(
+            f"unknown workload {name!r}; known: {sorted(_REGISTRY)}"
+        )
+    return fn
+
+
+def create_workload(name: str, n_keys: int, n_ops: int, **kwargs) -> Workload:
+    """Instantiate a registered workload by name."""
+    return get_workload(name)(n_keys, n_ops, **kwargs)
+
+
+def available_workloads() -> dict[str, Callable[..., Workload]]:
+    """Snapshot of the registry (canonical names and aliases alike)."""
+    return dict(_REGISTRY)
+
+
 def _mix(n_ops: int, read_write: tuple[int, int], rng: np.random.Generator):
     r, w = read_write
     if w == 0:
@@ -37,6 +104,7 @@ def _mix(n_ops: int, read_write: tuple[int, int], rng: np.random.Generator):
     return rng.random(n_ops) < (w / (r + w))
 
 
+@register_workload("uniform")
 def uniform(
     n_keys: int, n_ops: int, read_write=(1, 0), seed: int = 0
 ) -> Workload:
@@ -46,6 +114,7 @@ def uniform(
     )
 
 
+@register_workload("zipf", "zipfian")
 def zipf(
     n_keys: int, n_ops: int, exponent: float = 0.99, read_write=(1, 0), seed: int = 0
 ) -> Workload:
@@ -67,6 +136,7 @@ def zipf(
     )
 
 
+@register_workload("gaussian", "normal")
 def gaussian(
     n_keys: int, n_ops: int, sigma_frac: float = 0.08, read_write=(2, 1), seed: int = 0
 ) -> Workload:
@@ -78,6 +148,7 @@ def gaussian(
     return Workload("gaussian", keys, _mix(n_ops, read_write, rng), n_keys)
 
 
+@register_workload("graph-cache-leader", "gcl")
 def graph_cache_leader(
     n_keys: int, n_ops: int, read_write=(2, 1), seed: int = 0
 ) -> Workload:

@@ -159,6 +159,97 @@ class TestSweepPipeline:
         assert second[0].result.throughput == first[0].result.throughput
 
 
+class TestLatencyCollection:
+    """Regression for the sweep-cell cache silently degrading results: the
+    cached cells drop ``op_latencies``, so any call that needs latencies
+    must bypass the cache (loads and stores) instead of returning
+    ``mean_op_latency == 0`` on a hit."""
+
+    def test_collect_latency_bypasses_cache(self, lsm_small, tmp_path):
+        cfg = SimConfig(P=12, seed=7)
+        kw = dict(n_ops=1500, processes=1, cache_dir=tmp_path)
+        # warm the cache with a non-collecting sweep ...
+        warm = sweep_latency(cfg, lsm_small, [5 * US], (24, 40), **kw)
+        assert warm[0].result.op_latencies == []
+        assert len(list(tmp_path.glob("*.json"))) == 2
+        # ... then a collecting sweep over the same cells must NOT hit it
+        hot = sweep_latency(cfg, lsm_small, [5 * US], (24, 40),
+                            collect_latency=True, **kw)
+        assert len(hot[0].result.op_latencies) > 0
+        assert hot[0].result.mean_op_latency > 0
+        # and it must not have poisoned the cache for later cached sweeps
+        assert len(list(tmp_path.glob("*.json"))) == 2
+        again = sweep_latency(cfg, lsm_small, [5 * US], (24, 40), **kw)
+        assert again[0].result.throughput == warm[0].result.throughput
+
+    def test_collected_latencies_match_direct_simulation(self, lsm_small):
+        cfg = SimConfig(P=12, seed=7)
+        (pt,) = sweep_latency(cfg, lsm_small, [5 * US], (24,), n_ops=1500,
+                              processes=1, collect_latency=True)
+        direct = simulate_compiled(
+            dataclasses.replace(cfg, L_mem=5 * US, n_threads=24),
+            lsm_small.trace, 1500, collect_latency=True)
+        assert pt.result.op_latencies == direct.op_latencies
+
+    def test_parallel_cells_return_latencies(self, lsm_small):
+        cfg = SimConfig(P=12, seed=7)
+        pts = sweep_latency(cfg, lsm_small, [0.1 * US, 5 * US], (24, 40),
+                            n_ops=1500, processes=2, collect_latency=True)
+        for pt in pts:
+            assert len(pt.result.op_latencies) > 0
+
+
+class TestAdaptiveSweep:
+    """The warm-started thread search must agree with the full grid on the
+    paper sweep while evaluating fewer cells."""
+
+    LATS_US = (0.1, 0.3, 0.5, 1, 2, 3, 5, 8, 10)   # the Fig. 9-11 axis
+    CANDIDATES = (16, 24, 32, 48, 64)
+
+    def test_same_winner_as_full_grid_on_paper_sweep(self, lsm_small):
+        cfg = SimConfig(P=12, seed=7)
+        lats = [l * US for l in self.LATS_US]
+        full = sweep_latency(cfg, lsm_small, lats, self.CANDIDATES,
+                             n_ops=2000)
+        adapt = sweep_latency(cfg, lsm_small, lats, self.CANDIDATES,
+                              n_ops=2000, adaptive=True)
+        for f, a in zip(full, adapt):
+            assert a.n_threads == f.n_threads
+            _assert_identical(a.result, f.result)
+        cells_full = sum(len(p.per_thread) for p in full)
+        cells_adapt = sum(len(p.per_thread) for p in adapt)
+        assert cells_adapt < cells_full
+        # evaluated cells agree with the corresponding full-grid cells
+        for f, a in zip(full, adapt):
+            for n, thr in a.per_thread.items():
+                assert thr == f.per_thread[n]
+
+    def test_adaptive_uses_cell_cache(self, lsm_small, tmp_path):
+        cfg = SimConfig(P=12, seed=7)
+        lats = [0.1 * US, 5 * US]
+        first = sweep_latency(cfg, lsm_small, lats, (24, 40), n_ops=1500,
+                              adaptive=True, cache_dir=tmp_path)
+        cached = len(list(tmp_path.glob("*.json")))
+        assert cached == sum(len(p.per_thread) for p in first)
+        second = sweep_latency(cfg, lsm_small, lats, (24, 40), n_ops=1500,
+                               adaptive=True, cache_dir=tmp_path)
+        assert len(list(tmp_path.glob("*.json"))) == cached
+        for a, b in zip(first, second):
+            assert a.n_threads == b.n_threads
+            assert a.result.throughput == b.result.throughput
+
+    def test_adaptive_shares_cache_with_full_grid(self, lsm_small, tmp_path):
+        # adaptive cells are keyed exactly like grid cells, so the two
+        # modes memoize into (and reuse) the same cache
+        cfg = SimConfig(P=12, seed=7)
+        sweep_latency(cfg, lsm_small, [5 * US], (24, 40), n_ops=1500,
+                      processes=1, cache_dir=tmp_path)
+        n_before = len(list(tmp_path.glob("*.json")))
+        sweep_latency(cfg, lsm_small, [5 * US], (24, 40), n_ops=1500,
+                      adaptive=True, cache_dir=tmp_path)
+        assert len(list(tmp_path.glob("*.json"))) == n_before
+
+
 @pytest.mark.slow
 class TestAcceptance:
     """The refactor's acceptance criterion, verbatim: an 8-point latency
