@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Benchmark: the jax sweep backend vs. the forked-process loop pipeline.
+
+Times the same latency x threads grid through both `sweep_latency`
+backends on one shared LSM default-pairing trace and prints one CSV row
+per grid size::
+
+    grid,cells,loop_s,jax_warm_s,jax_cold_s,speedup_warm
+
+``loop_s`` uses the default worker-process fan-out (all cores);
+``jax_cold_s`` includes jit compilation, ``jax_warm_s`` is the steady
+state (best of ``--reps``).  The numbers recorded in
+docs/SIMULATION.md's benchmark note come from this script on the repo's
+2-core CI-class container.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/jax_grid_bench.py
+    PYTHONPATH=src python benchmarks/jax_grid_bench.py --grids 20x8,40x16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _grid_axes(spec: str, candidates_all: tuple[int, ...]):
+    n_lat, n_cand = (int(x) for x in spec.split("x"))
+    lats_us = list(np.round(np.linspace(0.1, 10.0, n_lat), 3))
+    # Interpolate a fine thread axis through the canonical candidate range.
+    cands = sorted({int(round(c)) for c in np.linspace(
+        min(candidates_all), max(candidates_all), n_cand)})
+    return lats_us, cands
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grids", default="20x8,40x16",
+                    help="comma-separated LATxTHREADS grid sizes")
+    ap.add_argument("--n-ops", type=int, default=5000)
+    ap.add_argument("--reps", type=int, default=3,
+                    help="warm-run repetitions (best is reported)")
+    ap.add_argument("--n-keys", type=int, default=30_000)
+    ap.add_argument("--n-wl-ops", type=int, default=10_000)
+    args = ap.parse_args()
+
+    from repro.core import workloads
+    from repro.core.engines import LSMStore, run_trace
+    from repro.core.sim import US, SimConfig
+    from repro.core.sim.config import DEFAULT_THREAD_CANDIDATES
+    from repro.core.sim.sweep import sweep_latency
+
+    store = LSMStore(args.n_keys)
+    wl = workloads.zipf(args.n_keys, args.n_wl_ops, 0.99, (1, 0), seed=3)
+    tr = run_trace(store, wl)
+    cfg = SimConfig(P=12, seed=7)
+    print(f"# trace: {tr.trace!r}", flush=True)
+    print("grid,cells,loop_s,jax_warm_s,jax_cold_s,speedup_warm")
+
+    # Time every loop-pipeline grid before jax is ever imported: importing
+    # jax switches the pipeline's worker start method off plain fork (see
+    # sweep._pick_context), and the loop backend deserves its fast path.
+    rows = []
+    for spec in args.grids.split(","):
+        lats_us, cands = _grid_axes(spec, DEFAULT_THREAD_CANDIDATES)
+        lats = [l * US for l in lats_us]
+        t0 = time.perf_counter()
+        sweep_latency(cfg, tr.trace, lats, cands, n_ops=args.n_ops)
+        rows.append((spec, lats, cands, time.perf_counter() - t0))
+
+    for spec, lats, cands, t_loop in rows:
+        t0 = time.perf_counter()
+        sweep_latency(cfg, tr.trace, lats, cands, n_ops=args.n_ops,
+                      backend="jax")
+        t_cold = time.perf_counter() - t0
+        t_warm = min(
+            _timed(sweep_latency, cfg, tr.trace, lats, cands,
+                   n_ops=args.n_ops, backend="jax")
+            for _ in range(args.reps)
+        )
+        print(f"{spec},{len(lats) * len(cands)},{t_loop:.2f},{t_warm:.2f},"
+              f"{t_cold:.2f},{t_loop / t_warm:.2f}", flush=True)
+
+
+def _timed(fn, *a, **kw) -> float:
+    t0 = time.perf_counter()
+    fn(*a, **kw)
+    return time.perf_counter() - t0
+
+
+if __name__ == "__main__":
+    main()

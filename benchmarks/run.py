@@ -17,8 +17,12 @@
 Latency sweeps go through the batched :func:`repro.core.sim.sweep_latency`
 pipeline; ``--processes`` sets the worker-process count for the grid,
 ``--sweep-cache`` memoizes finished sweep cells on disk so repeated runs
-only simulate what changed, and ``--adaptive`` warm-starts the per-point
-thread search from the previous latency point's winner.  ``--artifact``
+only simulate what changed (``--sweep-cache-clear`` empties it first; cell
+keys include the backend and a code-version salt so stale cells never
+survive code changes), ``--adaptive`` warm-starts the per-point thread
+search from the previous latency point's winner, and ``--backend jax``
+replays a scenario's whole grid as one jitted jax call
+(see ``docs/SIMULATION.md``).  ``--artifact``
 writes the scenario run's full :class:`~repro.core.experiment.RunArtifact`
 (sweep table + trace stats + model predictions + config provenance) as
 JSON.  ``--engine`` accepts any name or alias in the ``repro.core.engines``
@@ -75,6 +79,7 @@ def emit_artifact(art, prefix: str) -> None:
 
 def run_scenario_cmd(scenario, artifact_out: str | None,
                      collect_latency: bool, adaptive: bool,
+                     backend: str = "loop",
                      prefix: str | None = None) -> None:
     """Execute one scenario through the public experiment API."""
     from repro.core.experiment import Experiment
@@ -88,10 +93,12 @@ def run_scenario_cmd(scenario, artifact_out: str | None,
         art = Experiment(
             scenario,
             common.run_options(collect_latency=collect_latency,
-                               adaptive=adaptive),
+                               adaptive=adaptive, backend=backend),
         ).run()
     except KeyError as e:  # unknown engine/workload: resolution is lazy and
         sys.exit(str(e.args[0]) if e.args else str(e))  # lists what exists
+    except ValueError as e:  # e.g. incompatible --backend combination
+        sys.exit(str(e))
     emit_artifact(art, prefix)
     if artifact_out:
         with open(artifact_out, "w") as f:
@@ -107,7 +114,17 @@ def main() -> None:
                     help="worker processes for sweep grids (default: cpu count)")
     ap.add_argument("--sweep-cache", default=None, metavar="DIR",
                     help="directory memoizing finished sweep cells "
-                         "(e.g. .sweep_cache)")
+                         "(e.g. .sweep_cache); cells are keyed by config, "
+                         "trace, backend, and a code-version salt, so "
+                         "cells from older code are never served")
+    ap.add_argument("--sweep-cache-clear", action="store_true",
+                    help="with --sweep-cache: delete every memoized cell "
+                         "in the cache directory before running")
+    ap.add_argument("--backend", default="loop", choices=("loop", "jax"),
+                    help="with --scenario/--engine: sweep execution "
+                         "backend -- 'loop' interpreter cells (default) "
+                         "or the vectorized 'jax' grid (one jitted call; "
+                         "tolerance-equivalent, see docs/SIMULATION.md)")
     ap.add_argument("--scenario", default=None, metavar="SPEC.json",
                     help="run one declarative scenario spec through the "
                          "experiment API instead of the paper figures")
@@ -145,6 +162,15 @@ def main() -> None:
     common.SWEEP_PROCESSES = args.processes
     common.SWEEP_CACHE = args.sweep_cache
 
+    if args.sweep_cache_clear:
+        if args.sweep_cache is None:
+            sys.exit("--sweep-cache-clear requires --sweep-cache DIR")
+        from repro.core.sim import clear_sweep_cache
+
+        removed = clear_sweep_cache(args.sweep_cache)
+        print(f"sweep-cache: cleared {removed} cell(s) from "
+              f"{args.sweep_cache}", file=sys.stderr)
+
     print("name,us_per_call,derived")
 
     if args.scenario is not None:
@@ -160,7 +186,7 @@ def main() -> None:
         except (ValueError, TypeError, KeyError) as e:
             sys.exit(f"bad scenario spec {args.scenario!r}: {e}")
         run_scenario_cmd(scenario, args.artifact, args.collect_latency,
-                         args.adaptive)
+                         args.adaptive, args.backend)
         return
 
     if args.engine is not None:
@@ -173,7 +199,7 @@ def main() -> None:
         except KeyError as e:  # unknown engine: get_engine lists what exists
             sys.exit(str(e.args[0]) if e.args else str(e))
         run_scenario_cmd(scenario, args.artifact, args.collect_latency,
-                         args.adaptive,
+                         args.adaptive, args.backend,
                          prefix=f"matrix/{args.engine}/ssd{args.devices}")
         return
 

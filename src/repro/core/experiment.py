@@ -215,12 +215,17 @@ class RunOptions:
     ``adaptive`` evaluates a subset of the thread grid (``per_thread``
     covers fewer candidates, and the winner matches the full grid only on
     unimodal throughput-vs-threads curves -- the paper-sweep shape; see
-    :func:`~repro.core.sim.sweep_latency`)."""
+    :func:`~repro.core.sim.sweep_latency`); ``backend="jax"`` replays the
+    grid as one jitted scan whose per-cell throughput agrees with the loop
+    backend within sampling tolerance, not bit-identically (the scientific
+    spec is unchanged -- the measurement apparatus is; see
+    ``docs/SIMULATION.md``)."""
 
     processes: int | None = None       # sweep worker processes (None: auto)
     cache_dir: str | None = None       # on-disk sweep-cell cache
     collect_latency: bool = False      # per-op latencies per winning cell
     adaptive: bool = False             # warm-started thread search
+    backend: str = "loop"              # "loop" interpreters | "jax" grid
 
 
 @dataclass(frozen=True)
@@ -410,6 +415,7 @@ class Experiment:
             cfg, tr.trace, s.latencies_sec(), s.thread_candidates,
             n_ops=s.n_ops, processes=o.processes, cache_dir=o.cache_dir,
             collect_latency=o.collect_latency, adaptive=o.adaptive,
+            backend=o.backend,
         )
         # Eq. 14 outer IO caps for the model column, matching the scenario's
         # declared device pool (aggregate over the n_ssd per-device rates;

@@ -9,6 +9,12 @@ testbed"), as a layered package:
   * :mod:`.engine_loop` -- the generic event loop and the compiled
                            single-core fast loop over columnar traces
   * :mod:`.sweep`       -- the batched latency x threads sweep pipeline
+                           (``backend="loop"`` interpreter cells or
+                           ``backend="jax"`` vectorized grid)
+  * :mod:`.replay_jax`  -- the jax backend: the compiled trace lowered to
+                           device arrays and the whole grid replayed as one
+                           jitted scan (imported lazily -- importing jax is
+                           heavyweight and changes multiprocessing choices)
 
 The paper measures KV-operation throughput on real hardware whose memory
 latency is made adjustable by an FPGA CXL board.  This container has no
@@ -37,7 +43,12 @@ from .engine_loop import (  # noqa: F401
     trace_source,
 )
 from .scheduler import Core, ParkedHeap, Thread  # noqa: F401
-from .sweep import SweepPoint, sweep_latency  # noqa: F401
+from .sweep import (  # noqa: F401
+    BACKENDS,
+    SweepPoint,
+    clear_sweep_cache,
+    sweep_latency,
+)
 
 __all__ = [
     "US",
@@ -56,4 +67,6 @@ __all__ = [
     "best_over_threads",
     "sweep_latency",
     "SweepPoint",
+    "BACKENDS",
+    "clear_sweep_cache",
 ]

@@ -1,0 +1,594 @@
+"""Vectorized JAX replay: the whole latency x threads grid as one jitted call.
+
+The loop backends (:mod:`.engine_loop`) re-run an interpreter per grid cell;
+this module instead lowers the columnar :class:`~repro.core.trace_ir.
+CompiledTrace` into device arrays **once** (:class:`TraceArrays`), expresses
+one cell's scheduler recurrence as a ``jax.lax.scan`` over suboperation
+executions, and batches that scan across every ``(L_mem, n_threads)`` cell
+of a sweep, so an entire Fig. 9-style grid is a single compiled XLA program
+(:func:`sweep_grid`).
+
+The recurrence
+--------------
+One scan step executes exactly one suboperation of one thread in every grid
+cell.  Per cell the carried state is the single-core scheduler of the
+compiled loop, vectorized:
+
+  * thread selection: ready threads carry a monotone FIFO *ticket*
+    (their ring position), parked threads their IO *wake* time.  A step
+    wakes the earliest completed parked threads onto the back of the ring
+    in wake order (``ticket = counter++``, up to ``_WAKES_PER_STEP`` of
+    them -- see that constant's comment for why the bound is safe),
+    idle-skips the clock to the earliest wake-up when nothing is
+    runnable, and runs the smallest ticket -- a few ``argmin``
+    reductions, everything else one-hot scatters;
+  * MEM stalls against the thread's outstanding prefetch (or a resampled
+    latency on an eps-eviction), PREIO submits to the per-device token
+    clocks (round-robin striping, jitter, switch hop), op completion pays
+    ``T_lock``, and the next suboperation's prefetch is issued against the
+    P-deep in-flight window -- all the device arithmetic of
+    :mod:`.devices`, expressed on ``(n_cells, ...)`` arrays;
+  * the prefetch window is a fixed ``(n_cells, P)`` array of completion
+    times: entries ``<= now`` are free slots (the loop backends' lazily
+    drained heap), the replacement slot is the argmin, and the
+    all-in-flight delay is the row minimum.
+
+Cells that complete their measured ops latch their measurement (the
+counters stop; the simulation harmlessly idles on) while the scan drains
+the slower cells; the scan length is a worst-case bound computed from the
+trace's op-length prefix sums, so no cell can run out of steps.
+
+Exactness
+---------
+Scheduling, device arithmetic, and draw *distributions* match the loop
+backends; the RNG streams do not (``jax.random`` threefry vs. the stdlib
+Mersenne twister), and simultaneous-ready ties can resolve in a different
+order.  Per-cell throughput therefore agrees with the loop backends to
+sampling noise rather than bit-identically: ~0.5% typical (tails ~1.5%)
+at the default ``n_ops=5000``, shrinking as ``1/sqrt(n_ops)`` -- the 1%
+per-cell bound on the paper's default grid is enforced at
+``n_ops=20_000`` by ``tests/test_replay_jax.py``.  Scalar
+latencies and single-core configs only; ``sweep_latency(backend="jax")``
+routes mixture latencies through the loop backend per-cell.
+
+The per-step token-clock update can optionally run through the Pallas
+kernel :mod:`repro.kernels.token_clock` (``use_pallas=True``): on TPU that
+compiles the hot update; on CPU it runs in interpreter mode, which is far
+too slow for real sweeps but lets CI validate the kernel bit-for-bit
+against the pure-jnp path on tiny grids.
+
+Everything here is computed in float64 (``jax.experimental.enable_x64``):
+the state mixes ~second-scale clocks with 50 ns context switches, which
+float32 cannot carry.
+"""
+from __future__ import annotations
+
+import numbers
+import struct
+import zlib
+from dataclasses import dataclass
+from functools import partial
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from ..trace_ir import CPU, MEM, PREIO, CompiledTrace
+from .config import SimConfig, SimResult
+
+__all__ = ["TraceArrays", "GridResult", "sweep_grid", "lower_trace"]
+
+_STEP_BUCKET = 4096     # scan lengths round up to this (compile-cache reuse)
+_PAD_SENTINEL = CPU     # padded suboperations are inert plain-CPU entries
+
+
+def _bucket(n: int, bucket: int) -> int:
+    return max(bucket, -(-n // bucket) * bucket)
+
+
+@dataclass(frozen=True)
+class TraceArrays:
+    """A :class:`CompiledTrace` lowered to device arrays, shape-padded.
+
+    ``kinds``/``durs`` are the flat suboperation columns; ``op_starts`` /
+    ``op_ends`` are the per-op slice bounds (``bounds[:-1]``/``bounds[1:]``
+    of the source trace).  Arrays are padded up to power-of-two-ish buckets
+    so traces of similar size share one compiled sweep program; ``n_ops`` /
+    ``n_subops`` are the true (pre-padding) counts, and the replay indexes
+    ops modulo ``n_ops`` so padding is never executed.  ``to_trace``
+    reconstructs the source trace losslessly (``tests/test_replay_jax.py``
+    proves the round-trip for every registered engine).
+    """
+
+    kinds: jax.Array      # int32 (n_subops_padded,)
+    durs: jax.Array       # float64 (n_subops_padded,)
+    op_starts: jax.Array  # int32 (n_ops_padded,)
+    op_ends: jax.Array    # int32 (n_ops_padded,)
+    n_ops: int
+    n_subops: int
+
+    @classmethod
+    def from_trace(cls, trace: CompiledTrace,
+                   bucket: int = 1024) -> "TraceArrays":
+        n_ops, n_subops = trace.n_ops, trace.n_subops
+        kinds = np.full(_bucket(n_subops, bucket), _PAD_SENTINEL,
+                        dtype=np.int32)
+        kinds[:n_subops] = trace.kinds
+        durs = np.zeros(len(kinds), dtype=np.float64)
+        durs[:n_subops] = trace.durs
+        n_ops_pad = _bucket(n_ops, bucket)
+        starts = np.empty(n_ops_pad, dtype=np.int32)
+        ends = np.empty(n_ops_pad, dtype=np.int32)
+        starts[:n_ops] = trace.bounds[:-1]
+        ends[:n_ops] = trace.bounds[1:]
+        starts[n_ops:] = trace.bounds[-2]    # replicate the last op; the
+        ends[n_ops:] = trace.bounds[-1]      # replay never reads past n_ops
+        with enable_x64():
+            return cls(jnp.asarray(kinds), jnp.asarray(durs),
+                       jnp.asarray(starts), jnp.asarray(ends),
+                       n_ops, n_subops)
+
+    def to_trace(self) -> CompiledTrace:
+        """Decode back to the exact source :class:`CompiledTrace`."""
+        starts = np.asarray(self.op_starts)[: self.n_ops]
+        ends = np.asarray(self.op_ends)[: self.n_ops]
+        bounds = np.concatenate([starts, ends[-1:]]).astype(np.int64)
+        return CompiledTrace.from_columns(
+            np.asarray(self.kinds)[: self.n_subops].astype(np.int8),
+            np.asarray(self.durs)[: self.n_subops],
+            bounds,
+        )
+
+
+def lower_trace(trace: CompiledTrace, bucket: int = 1024) -> TraceArrays:
+    """Functional alias for :meth:`TraceArrays.from_trace`."""
+    return TraceArrays.from_trace(trace, bucket)
+
+
+@dataclass(frozen=True)
+class GridResult:
+    """Per-cell sweep results, shaped ``(n_latencies, n_candidates)``."""
+
+    throughput: np.ndarray
+    time: np.ndarray
+    mem_stall_total: np.ndarray
+    mem_accesses: np.ndarray
+    ops: int                      # measured ops per cell (same for all)
+    steps: int                    # scan length the grid compiled to
+
+    def result(self, li: int, ci: int) -> SimResult:
+        """One cell as a :class:`SimResult` (no per-op latency columns --
+        use the loop backends for those)."""
+        return SimResult(
+            ops=self.ops,
+            time=float(self.time[li, ci]),
+            throughput=float(self.throughput[li, ci]),
+            mem_stall_total=float(self.mem_stall_total[li, ci]),
+            mem_accesses=int(self.mem_accesses[li, ci]),
+        )
+
+
+def _max_window_subops(bounds: np.ndarray, n_window_ops: int) -> int:
+    """Worst-case suboperation count of ``n_window_ops`` consecutive ops of
+    the cyclic trace, over all start offsets (exact, via prefix sums)."""
+    lens = np.diff(bounds)
+    n = len(lens)
+    total = int(lens.sum())
+    cycles, rem = divmod(n_window_ops, n)
+    worst_rem = 0
+    if rem:
+        cs = np.concatenate([[0], np.cumsum(np.concatenate([lens, lens]))])
+        worst_rem = int((cs[rem: rem + n] - cs[:n]).max())
+    return cycles * total + worst_rem
+
+
+def _steps_bound(trace: CompiledTrace, n_ops: int, max_warmup: int,
+                 max_threads: int) -> int:
+    """Scan length guaranteeing every cell completes its measured ops.
+
+    A cell terminates once ``warmup + n_ops - 1`` ops have completed; every
+    executed suboperation belongs to an op issued from the shared cyclic
+    cursor, and at most ``completions + n_threads`` ops are ever issued --
+    a consecutive window whose suboperation count bounds the step count.
+    """
+    window = max_warmup + n_ops + max_threads
+    return _bucket(_max_window_subops(trace.bounds, window), _STEP_BUCKET)
+
+
+# -- the jitted grid ---------------------------------------------------------
+
+
+def _make_flags(cfg: SimConfig) -> dict:
+    """Static specialization flags (Python bools baked into the program)."""
+    return dict(
+        has_eps=cfg.eps > 0.0,
+        has_rho=cfg.rho < 1.0,
+        has_jitter=cfg.L_io_jitter > 0.0,
+        has_rio=cfg.R_io > 0.0,
+        has_bio=cfg.B_io > 0.0,
+        has_bmem=cfg.B_mem > 0.0,
+        has_lock=cfg.T_lock > 0.0,
+    )
+
+
+def _tok_fn(use_pallas: bool):
+    if use_pallas:
+        from repro.kernels.token_clock import token_clock_update
+        return token_clock_update
+    from repro.kernels.token_clock import token_clock_update_ref
+    return token_clock_update_ref
+
+
+_RNG_CHUNK = 1024   # steps per generated uniform block (memory/dispatch knob)
+
+# IO wake-ups processed per scan step.  The loop backends drain *every*
+# completed parked thread at each scheduler iteration; the scan wakes a
+# bounded number and defers the rest one step, which only matters when
+# several IO completions land inside one suboperation's span.  Arrival
+# rates are well below 1 wake/step (<= S / subops-per-op, at most ~1/3
+# for the IO-densest engine), so a small constant keeps the deferral
+# probability -- and its throughput bias -- negligible for every
+# registered engine (tests/test_replay_jax.py enforces the 1% budget).
+_WAKES_PER_STEP = 3
+
+
+@partial(jax.jit, static_argnames=(
+    "T_max", "P", "n_ssd", "steps", "unroll", "use_pallas", "has_eps",
+    "has_rho", "has_jitter", "has_rio", "has_bio", "has_bmem", "has_lock"))
+def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
+              L_mem_g, nthr_g, warm_g, n_ops, dyn, key, stream_ids, *,
+              T_max, P, n_ssd, steps, unroll, use_pallas,
+              has_eps, has_rho, has_jitter, has_rio, has_bio, has_bmem,
+              has_lock):
+    has_io_clock = has_rio or has_bio
+    f = jnp.float64
+    i4 = jnp.int32
+    G = L_mem_g.shape[0]
+    (T_sw, eps, rho, L_dram, L_io, jitter, inv_R, cost_bw_io, L_switch,
+     cost_bmem, T_lock) = dyn
+
+    def lmem(u, L):
+        """sample_lmem for scalar latencies: DRAM-tier short-circuit."""
+        if has_rho:
+            return jnp.where(u >= rho, L_dram, L)
+        return L
+
+    # Packed trace columns: one gather serves (kind, dur) / (start, end).
+    kd = jnp.stack([kinds.astype(f), durs], axis=1)          # (n_subops, 2)
+    se = jnp.stack([op_starts, op_ends], axis=1)             # (n_ops, 2)
+
+    # Uniform draws actually consumed per step, in consumption order (the
+    # static flags decide): eps-eviction test + its resample, IO jitter,
+    # the prefetch latency sample.  Draws are generated one _RNG_CHUNK of
+    # steps at a time and fed to the inner scan as xs, so the step body
+    # contains no hashing.
+    n_u = 2 * has_eps + has_jitter + has_rho
+
+    # -- per-cell RNG streams ------------------------------------------------
+    # Every draw derives from fold_in(key, stream_id) where the stream id
+    # hashes the cell's (L_mem, n_threads) identity -- NOT its position or
+    # the batch size -- so a cell's numbers are identical whether it runs
+    # alone, inside the full grid, or as the cache-miss remainder of a
+    # partially memoized sweep (the cell cache requires cell values to be
+    # a pure function of their key).  Per-thread init draws fold in the
+    # thread index individually for the same reason: they must not depend
+    # on the batch's T_max padding.
+    cell_keys = jax.vmap(jax.random.fold_in, (None, 0))(key, stream_ids)
+    k_chunks = jax.vmap(lambda k: jax.random.fold_in(k, 1))(cell_keys)
+    tids = jnp.arange(T_max, dtype=i4)
+    active = tids[None, :] < nthr_g[:, None]                       # (G, T)
+    u_cursor = jax.vmap(lambda k: jax.random.uniform(
+        jax.random.fold_in(k, 0), (), dtype=f))(cell_keys)
+    cursor0 = jnp.floor(u_cursor * n_trace).astype(i4)
+    opidx0 = (cursor0[:, None] + tids[None, :]) % n_trace
+    cursor_init = (cursor0 + nthr_g) % n_trace
+    u_thread = jax.vmap(lambda k: jax.vmap(
+        lambda t: jax.random.uniform(jax.random.fold_in(k, 2 + t), (2,),
+                                     dtype=f))(tids))(cell_keys)  # (G, T, 2)
+    pf0 = u_thread[:, :, 0] * lmem(u_thread[:, :, 1], L_mem_g[:, None])
+
+    # Per-cell scalar state lives in two packed (G, k) arrays: every carried
+    # array is a materialization point for XLA's fuser, so fewer/wider
+    # carries mean fewer tiny kernels per step.  Column layouts:
+    #   cf: 0 now, 1 FIFO ticket counter, 2 prefetch bandwidth clock,
+    #       3 lock clock, 4 t_start, 5 t_end, 6 measured stall seconds
+    #   ci: 0 trace cursor, 1 IO round-robin, 2 completed ops, 3 measured
+    #       ops, 4 measured MEM accesses, 5 measuring flag (0/1)
+    #
+    # Per-thread state is (G, T) planes, updated by one-hot scatters only
+    # (XLA keeps those in-place inside the scan, so per-step traffic is
+    # O(G) writes plus the reduction reads):
+    #   pf     -- outstanding prefetch completion time
+    #   ticket -- ready threads' FIFO ring position (+inf while parked);
+    #             a monotone per-cell counter stamps every push
+    #   wake   -- parked threads' IO completion time (+inf while ready)
+    #
+    # Each step re-creates the loop backends' scheduler iteration: wake
+    # the earliest parked thread whose IO completed (it joins the BACK of
+    # the ring: ticket = counter++), idle-skip the clock to the earliest
+    # wake-up when nothing is runnable, then run the ring head (smallest
+    # ticket).  Waking one thread per step instead of draining a batch
+    # only matters when several wake-ups land inside one suboperation's
+    # span -- the later ones join the ring a step late, a rare bounded
+    # one-position slip that is part of the backend's tolerance budget.
+    rows = jnp.arange(G, dtype=i4)
+    state = dict(
+        cf=jnp.zeros((G, 7), f).at[:, 4].set(-1.0).at[:, 1].set(
+            float(T_max)),
+        ci=jnp.stack(
+            [cursor_init, jnp.zeros(G, i4), jnp.zeros(G, i4),
+             jnp.zeros(G, i4), jnp.zeros(G, i4),
+             (warm_g <= 0).astype(i4)], axis=1),
+        pf=pf0,
+        ticket=jnp.where(active, tids[None, :].astype(f), jnp.inf),
+        wake=jnp.full((G, T_max), jnp.inf, f),
+        thr_i=jnp.stack([op_starts[opidx0], op_ends[opidx0]], axis=2),
+        pf_slots=jnp.zeros((G, P), f),
+    )
+    if has_io_clock:
+        state["io_tok"] = jnp.zeros((G, n_ssd), f)
+        state["io_bw"] = jnp.zeros((G, n_ssd), f)
+
+    def step(s, u):
+        un = iter(range(n_u))
+        cf, ci = s["cf"], s["ci"]
+        counter = cf[:, 1]
+        counted0 = ci[:, 3]
+        reached = counted0 >= n_ops    # cell already took its last op
+
+        # -- wake + idle-skip + pop, in loop-backend order -------------------
+        r_tid = jnp.argmin(s["ticket"], axis=1)
+        r_t = jnp.take_along_axis(s["ticket"], r_tid[:, None], 1)[:, 0]
+        ready_exists = jnp.isfinite(r_t)
+        ticket, wake = s["ticket"], s["wake"]
+        now = cf[:, 0]
+        tid = r_tid
+        for k in range(_WAKES_PER_STEP):
+            w_tid = jnp.argmin(wake, axis=1)
+            w_t = jnp.take_along_axis(wake, w_tid[:, None], 1)[:, 0]
+            if k == 0:
+                # nothing runnable: jump to the earliest IO completion
+                now = jnp.where(ready_exists, now, jnp.maximum(now, w_t))
+                tid = jnp.where(ready_exists, r_tid, w_tid)
+            do_wake = w_t <= now
+            # When nothing is parked w_tid is a bogus all-inf argmin (it
+            # can point at a READY thread), so the no-wake branch must
+            # write the existing values back, never a constant.
+            t_at_w = jnp.take_along_axis(ticket, w_tid[:, None], 1)[:, 0]
+            ticket = ticket.at[rows, w_tid].set(
+                jnp.where(do_wake, counter, t_at_w))
+            wake = wake.at[rows, w_tid].set(
+                jnp.where(do_wake, jnp.inf, w_t))
+            counter = counter + do_wake
+
+        ie = jnp.take_along_axis(s["thr_i"], tid[:, None, None], 1)[:, 0]
+        i, end_tid = ie[:, 0], ie[:, 1]
+        pf_tid0 = jnp.take_along_axis(s["pf"], tid[:, None], 1)[:, 0]
+        kd_i = kd[i]                                 # (G, 2)
+        kind = kd_i[:, 0]
+        dur = kd_i[:, 1]
+
+        # -- MEM: stall on the outstanding prefetch (or an eps re-fetch) -----
+        is_mem = kind == MEM
+        ready_at = pf_tid0
+        if has_eps:
+            u_eps = u[next(un)]
+            u_evict = u[next(un)]
+            ready_at = jnp.where(u_eps < eps,
+                                 now + lmem(u_evict, L_mem_g), ready_at)
+        stall = ready_at - now
+        stalled = is_mem & (stall > 0.0)
+        live = (ci[:, 5] > 0) & ~reached
+        mem_stall = cf[:, 6] + jnp.where(stalled & live, stall, 0.0)
+        mem_acc = ci[:, 4] + (is_mem & live)
+        now = jnp.where(stalled, ready_at, now) + dur
+
+        # -- op completion: counters, measurement window, next op, T_lock ----
+        i2 = i + 1
+        eoo = i2 >= end_tid
+        done = ci[:, 2] + eoo
+        meas_evt = eoo & (done >= warm_g) & ~reached
+        measuring = jnp.maximum(ci[:, 5], meas_evt)
+        counted = counted0 + meas_evt
+        t_start = jnp.where(meas_evt & (cf[:, 4] < 0.0), now, cf[:, 4])
+        se_c = se[ci[:, 0]]                          # (G, 2)
+        ni = jnp.where(eoo, se_c[:, 0], i2)
+        nend = jnp.where(eoo, se_c[:, 1], end_tid)
+        cursor = jnp.where(eoo, (ci[:, 0] + 1) % n_trace, ci[:, 0])
+        lock_next = cf[:, 3]
+        if has_lock:
+            lock_end = jnp.maximum(now, lock_next) + T_lock
+            now = jnp.where(eoo, lock_end, now)
+            lock_next = jnp.where(eoo, lock_end, lock_next)
+
+        # -- PREIO: submit against the striped per-device token clocks -------
+        park = (kind == PREIO) & ~eoo
+        io_rr = ci[:, 1]
+        if not has_io_clock:
+            svc = now
+            io_out = {}
+        elif n_ssd == 1 and not use_pallas:
+            # Inlined single-device clocks (the common matrix config);
+            # clocks only advance for cells actually submitting an IO.
+            io_tok, io_bw = s["io_tok"][:, 0], s["io_bw"][:, 0]
+            svc = now
+            if has_rio:
+                svc = jnp.maximum(svc, io_tok)
+                io_tok = jnp.where(park, svc + inv_R, io_tok)
+            if has_bio:
+                svc = jnp.maximum(svc, io_bw)
+                io_bw = jnp.where(park, svc + cost_bw_io, io_bw)
+            io_out = {"io_tok": io_tok[:, None], "io_bw": io_bw[:, None]}
+        else:
+            devmask = (jnp.arange(n_ssd)[None, :]
+                       == (io_rr % n_ssd)[:, None]) & park[:, None]
+            svc, tok2d, bw2d = _tok_fn(use_pallas)(
+                now, devmask, s["io_tok"], s["io_bw"], inv_R, cost_bw_io)
+            io_out = {"io_tok": tok2d, "io_bw": bw2d}
+            io_rr = io_rr + park
+        lat_io = L_io
+        if has_jitter:
+            lat_io = L_io * (1.0 + jitter * (2.0 * u[next(un)] - 1.0))
+        park_until = svc + lat_io + L_switch
+
+        # -- issue the next suboperation's prefetch (P-deep window) ----------
+        issue = kd[ni][:, 0] == MEM
+        # All P slots in flight <=> the window minimum is still in the
+        # future, so the all-busy delay is just max(now, min slot); the
+        # minimum slot is also the replacement target either way.
+        slot = jnp.argmin(s["pf_slots"], axis=1)
+        slot_min = jnp.take_along_axis(s["pf_slots"], slot[:, None], 1)[:, 0]
+        pstart = jnp.maximum(now, slot_min)
+        pf_bw = cf[:, 2]
+        if has_bmem:
+            pstart = jnp.maximum(pstart, pf_bw)
+            pf_bw = jnp.where(issue, pstart + cost_bmem, pf_bw)
+        u_pf = u[next(un)] if has_rho else None
+        comp = pstart + lmem(u_pf, L_mem_g)
+        pf_slots = s["pf_slots"].at[rows, slot].set(
+            jnp.where(issue, comp, slot_min))
+        pf_tid = jnp.where(issue, comp, pf_tid0)
+
+        # -- yield: context switch, park or re-enter the ready ring ----------
+        now = now + T_sw
+
+        crossed = (counted >= n_ops) & ~reached
+        t_end = jnp.where(crossed, now, cf[:, 5])
+        return dict(
+            cf=jnp.stack([now, counter + 1.0, pf_bw, lock_next, t_start,
+                          t_end, mem_stall], axis=1),
+            ci=jnp.stack([cursor, io_rr, done, counted, mem_acc,
+                          measuring], axis=1),
+            pf=s["pf"].at[rows, tid].set(pf_tid),
+            ticket=ticket.at[rows, tid].set(
+                jnp.where(park, jnp.inf, counter)),
+            wake=wake.at[rows, tid].set(
+                jnp.where(park, jnp.maximum(park_until, now), jnp.inf)),
+            thr_i=s["thr_i"].at[rows, tid].set(
+                jnp.stack([ni, nend], axis=1)),
+            pf_slots=pf_slots,
+            **io_out,
+        ), None
+
+    def chunk(s, ck):
+        if n_u:
+            us = jax.vmap(lambda k: jax.random.uniform(
+                jax.random.fold_in(k, ck), (_RNG_CHUNK, n_u),
+                dtype=f))(k_chunks)              # (G, CH, n_u), per cell
+            us = jnp.moveaxis(us, 0, -1)         # (CH, n_u, G)
+        else:
+            us = jnp.zeros((_RNG_CHUNK, 0, G), f)
+        return jax.lax.scan(step, s, us, unroll=unroll)
+
+    state, _ = jax.lax.scan(
+        chunk, state, jnp.arange(steps // _RNG_CHUNK, dtype=i4))
+    cf, ci = state["cf"], state["ci"]
+    elapsed = jnp.maximum(cf[:, 5] - cf[:, 4], 1e-12)
+    return dict(
+        throughput=n_ops / elapsed,
+        time=elapsed,
+        mem_stall_total=cf[:, 6],
+        mem_accesses=ci[:, 4],
+        counted=ci[:, 3],
+    )
+
+
+def sweep_grid(
+    cfg: SimConfig,
+    trace: CompiledTrace | TraceArrays,
+    latencies: Sequence[float],
+    thread_candidates: Sequence[int],
+    n_ops: int = 5000,
+    warmup_ops: int | None = None,
+    *,
+    use_pallas: bool = False,
+    unroll: int = 2,
+) -> GridResult:
+    """Run the full ``latencies x thread_candidates`` grid in one compiled
+    call; see the module docstring for semantics and exactness.
+
+    ``cfg`` supplies everything except ``L_mem``/``n_threads`` (the grid
+    axes).  Scalar latencies and single-core configs only; ``warmup_ops``
+    defaults per cell to ``2 * n_threads``, like the loop backends.
+    """
+    if cfg.n_cores != 1:
+        raise ValueError(
+            "the jax backend replays single-core configs only; use "
+            "backend='loop' for n_cores > 1")
+    if cfg.collect_load_hist:
+        raise ValueError(
+            "per-load stall histograms are not available from the jax "
+            "backend; use backend='loop'")
+    if cfg.n_ssd < 1:
+        raise ValueError(f"n_ssd must be >= 1, got {cfg.n_ssd}")
+    latencies = list(latencies)
+    candidates = [int(n) for n in thread_candidates]
+    if not latencies or not candidates:
+        raise ValueError("empty sweep grid")
+    if not all(isinstance(L, numbers.Real) for L in latencies):
+        raise ValueError(
+            "the jax backend replays scalar latencies only; "
+            "sweep_latency(backend='jax') routes mixture points through "
+            "the loop backend")
+    if min(candidates) < 1:
+        raise ValueError(f"thread candidates must be >= 1: {candidates}")
+
+    source = trace if isinstance(trace, CompiledTrace) else trace.to_trace()
+    ta = trace if isinstance(trace, TraceArrays) else lower_trace(trace)
+    T_max = max(candidates)
+    n_lat, n_cand = len(latencies), len(candidates)
+    L_mem_g = np.repeat(np.asarray(latencies, dtype=np.float64), n_cand)
+    nthr_g = np.tile(np.asarray(candidates, dtype=np.int32), n_lat)
+    warm_g = (np.full_like(nthr_g, warmup_ops) if warmup_ops is not None
+              else 2 * nthr_g)
+    steps = _steps_bound(source, n_ops, int(warm_g.max()), T_max)
+
+    # Each cell's RNG stream is keyed by its (L_mem, n_threads) VALUES, so
+    # a cell's result never depends on which other cells share the call
+    # (cache purity; see the per-cell RNG comment in _run_grid).
+    stream_ids = np.array(
+        [zlib.crc32(struct.pack("<dq", L, n))
+         for L in np.asarray(latencies, dtype=np.float64)
+         for n in candidates],
+        dtype=np.uint32,
+    )
+
+    dyn = (
+        cfg.T_sw, cfg.eps, cfg.rho, cfg.L_dram, cfg.L_io, cfg.L_io_jitter,
+        1.0 / cfg.R_io if cfg.R_io > 0.0 else 0.0,
+        cfg.A_io / cfg.B_io if cfg.B_io > 0.0 else 0.0,
+        cfg.L_switch,
+        cfg.A_mem / cfg.B_mem if cfg.B_mem > 0.0 else 0.0,
+        cfg.T_lock,
+    )
+    with enable_x64():
+        out = _run_grid(
+            ta.kinds, ta.durs, ta.op_starts, ta.op_ends,
+            jnp.int32(ta.n_ops),
+            jnp.asarray(L_mem_g), jnp.asarray(nthr_g), jnp.asarray(warm_g),
+            jnp.float64(n_ops),
+            tuple(jnp.float64(d) for d in dyn),
+            jax.random.PRNGKey(cfg.seed),
+            jnp.asarray(stream_ids),
+            T_max=T_max, P=cfg.P, n_ssd=cfg.n_ssd, steps=steps,
+            unroll=unroll, use_pallas=use_pallas, **_make_flags(cfg),
+        )
+        out = {k: np.asarray(v) for k, v in out.items()}
+    if not np.all(out["counted"] >= n_ops):
+        short = int(out["counted"].min())
+        raise RuntimeError(
+            f"jax replay under-ran its step bound ({steps} steps, worst "
+            f"cell counted {short}/{n_ops} ops) -- this is a bug in "
+            "_steps_bound")
+    shape = (n_lat, n_cand)
+    return GridResult(
+        throughput=out["throughput"].reshape(shape),
+        time=out["time"].reshape(shape),
+        mem_stall_total=out["mem_stall_total"].reshape(shape),
+        mem_accesses=out["mem_accesses"].reshape(shape),
+        ops=n_ops,
+        steps=steps,
+    )

@@ -23,7 +23,9 @@ from __future__ import annotations
 import hashlib
 import json
 import multiprocessing as mp
+import numbers
 import os
+import re
 import sys
 from dataclasses import dataclass, replace
 from typing import Callable, Iterable, Sequence
@@ -32,7 +34,11 @@ from ..trace_ir import CompiledTrace, Op
 from .config import DEFAULT_THREAD_CANDIDATES, SimConfig, SimResult
 from .engine_loop import simulate, simulate_compiled
 
-__all__ = ["SweepPoint", "sweep_latency"]
+__all__ = ["SweepPoint", "sweep_latency", "clear_sweep_cache", "BACKENDS"]
+
+#: Valid ``backend=`` values: the interpreter loops (generic/compiled), or
+#: the vectorized jax grid (:mod:`.replay_jax`).
+BACKENDS = ("loop", "jax")
 
 
 @dataclass
@@ -121,6 +127,38 @@ def _pick_context(trace, src_fn):
     return None
 
 
+def _run_jax_cells(cfg: SimConfig, trace: CompiledTrace, latencies,
+                   candidates, n_ops, warmup_ops, results, todo) -> None:
+    """Fill ``results[i]`` for every grid index in ``todo`` via the jax
+    backend.  All missing scalar-latency cells run as one vectorized grid
+    call (:func:`repro.core.sim.replay_jax.sweep_grid`); mixture-latency
+    cells (which the jax backend does not model) run through the compiled
+    loop per cell."""
+    from . import replay_jax   # deferred: jax is a heavyweight import
+
+    k = len(candidates)
+    # numbers.Real admits numpy scalars too (np.float32 is not a float
+    # subclass), keeping this classification consistent with sweep_grid's
+    need_lis = sorted({
+        i // k for i in todo
+        if isinstance(latencies[i // k], numbers.Real)
+    })
+    grid = None
+    if need_lis:
+        grid = replay_jax.sweep_grid(
+            cfg, trace, [latencies[li] for li in need_lis], candidates,
+            n_ops, warmup_ops)
+    row_of = {li: r for r, li in enumerate(need_lis)}
+    for i in todo:
+        li, ci = divmod(i, k)
+        if li in row_of:
+            results[i] = grid.result(row_of[li], ci)
+        else:
+            results[i] = simulate_compiled(
+                replace(cfg, L_mem=latencies[li], n_threads=candidates[ci]),
+                trace, n_ops, warmup_ops)
+
+
 # -- on-disk cell cache ------------------------------------------------------
 
 # op_latencies / load_stalls are deliberately NOT cached (they are large and
@@ -130,13 +168,73 @@ def _pick_context(trace, src_fn):
 _CACHED_FIELDS = ("ops", "time", "throughput", "mem_stall_total",
                   "mem_accesses")
 
+# Source files whose semantics define what a cached cell means.  Their
+# digest is folded into every cell key, so cells from an older revision of
+# the simulator can never be served as current results (previously stale
+# cells silently survived code changes).
+_SALT_FILES = ("config.py", "devices.py", "engine_loop.py", "scheduler.py",
+               "sweep.py", "replay_jax.py")
+_CODE_SALT: str | None = None
+
+
+def _code_salt() -> str:
+    """Digest of the simulation-defining sources (cached per process)."""
+    global _CODE_SALT
+    if _CODE_SALT is None:
+        here = os.path.dirname(os.path.abspath(__file__))
+        core = os.path.dirname(here)
+        paths = [os.path.join(here, name) for name in _SALT_FILES]
+        paths.append(os.path.join(core, "trace_ir.py"))
+        # the jax backend's token-clock arithmetic lives in the kernels
+        # package; its semantics define cached jax cells too
+        paths.append(os.path.join(os.path.dirname(core), "kernels",
+                                  "token_clock.py"))
+        h = hashlib.sha1()
+        for path in paths:
+            with open(path, "rb") as fh:
+                h.update(fh.read())
+        _CODE_SALT = h.hexdigest()[:16]
+    return _CODE_SALT
+
 
 def _cache_key(cfg: SimConfig, trace_digest: str, n_ops: int,
-               warmup_ops) -> str:
+               warmup_ops, backend: str) -> str:
+    # The backend is part of the key: loop and jax cells agree only within
+    # tolerance, so a cached cell must never answer for the other backend.
     blob = json.dumps(
-        [repr(cfg), trace_digest, n_ops, warmup_ops], sort_keys=True
+        [repr(cfg), trace_digest, n_ops, warmup_ops, backend, _code_salt()],
+        sort_keys=True,
     ).encode()
     return hashlib.sha1(blob).hexdigest()
+
+
+# Cell files are "<sha1 hex>.json" (plus "<...>.json.tmp.<pid>" while a
+# store is in flight); clear_sweep_cache must only ever match that shape --
+# the cache dir may be a working directory holding scenario specs or
+# artifact JSON that are NOT ours to delete.
+_CELL_FILE = re.compile(r"^[0-9a-f]{40}\.json(\.tmp\.\d+)?$")
+
+
+def clear_sweep_cache(cache_dir: str | os.PathLike) -> int:
+    """Delete every memoized sweep cell in ``cache_dir``; returns the number
+    of cells removed (in-flight temp files are removed but not counted).
+    Only cell-shaped file names are touched; anything else in the
+    directory is left alone.  Used by ``benchmarks.run
+    --sweep-cache-clear``."""
+    removed = 0
+    try:
+        names = os.listdir(cache_dir)
+    except OSError:
+        return 0
+    for name in names:
+        if _CELL_FILE.match(name):
+            try:
+                os.remove(os.path.join(str(cache_dir), name))
+            except OSError:
+                continue
+            if name.endswith(".json"):
+                removed += 1
+    return removed
 
 
 def _cache_load(path: str) -> SimResult | None:
@@ -183,6 +281,7 @@ def sweep_latency(
     cache_dir: str | os.PathLike | None = None,
     collect_latency: bool = False,
     adaptive: bool = False,
+    backend: str = "loop",
 ) -> list[SweepPoint]:
     """Throughput vs. memory latency with per-point thread optimization.
 
@@ -233,14 +332,47 @@ def sweep_latency(
         run serially (later points depend on earlier winners), so
         ``processes`` is ignored; ``per_thread`` only contains the
         candidates actually evaluated.
+    backend
+        ``"loop"`` (default) runs every cell through the interpreter loops
+        (compiled fast path, generic fallback) as above.  ``"jax"`` lowers
+        the compiled trace to device arrays once and replays the entire
+        scalar-latency grid as one jitted scan
+        (:func:`repro.core.sim.replay_jax.sweep_grid`): per-cell
+        throughput agrees with the loops within sampling tolerance rather
+        than bit-identically (see ``docs/SIMULATION.md``), mixture-latency
+        points still run through the loop per cell, and ``processes`` is
+        ignored for the jax cells.  Requires a trace source (not a
+        callable), a single-core config, and no latency/histogram
+        collection; incompatible with ``adaptive=True``.  Cached cells are
+        keyed per backend, so the two never answer for each other.
 
     Returns one :class:`SweepPoint` per latency, in input order.
     """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     latencies = list(latencies)
     candidates = list(thread_candidates)
     if not latencies or not candidates:
         return []
     trace, src_fn = _coerce_trace(source)
+
+    if backend == "jax":
+        if adaptive:
+            raise ValueError(
+                "backend='jax' evaluates the whole grid in one call; the "
+                "warm-started adaptive search is a loop-backend strategy")
+        if collect_latency or cfg.collect_load_hist:
+            raise ValueError(
+                "per-op latency / load-histogram collection is only "
+                "available from backend='loop'")
+        if trace is None:
+            raise ValueError(
+                "backend='jax' replays compiled traces; pass a "
+                "CompiledTrace / TraceResult / list[Op], not a callable")
+        if cfg.n_cores != 1:
+            raise ValueError(
+                "backend='jax' replays single-core configs only; use "
+                "backend='loop' for n_cores > 1")
 
     use_cache = (cache_dir is not None and trace is not None
                  and not cfg.collect_load_hist and not collect_latency)
@@ -254,7 +386,8 @@ def sweep_latency(
 
     def cell_path(c: SimConfig) -> str:
         return os.path.join(
-            str(cache_dir), _cache_key(c, digest, n_ops, warmup_ops) + ".json")
+            str(cache_dir),
+            _cache_key(c, digest, n_ops, warmup_ops, backend) + ".json")
 
     if adaptive:
         return _sweep_adaptive(cfg, trace, src_fn, latencies, candidates,
@@ -278,6 +411,13 @@ def sweep_latency(
     todo = [i for i, r in enumerate(results) if r is None]
 
     # -- run missing cells ---------------------------------------------------
+    if backend == "jax" and todo:
+        _run_jax_cells(cfg, trace, latencies, candidates, n_ops,
+                       warmup_ops, results, todo)
+        if use_cache:
+            for i in todo:
+                _cache_store(paths[i], results[i])
+        todo = []
     if processes is None:
         processes = min(os.cpu_count() or 1, len(todo) or 1)
     ctx = _pick_context(trace, src_fn)
