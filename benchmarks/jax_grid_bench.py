@@ -1,93 +1,209 @@
 #!/usr/bin/env python
 """Benchmark: the jax sweep backend vs. the forked-process loop pipeline.
 
-Times the same latency x threads grid through both `sweep_latency`
-backends on one shared LSM default-pairing trace and prints one CSV row
-per grid size::
+Times the same latency x threads grids through both ``sweep_latency``
+backends and records the measurements as JSON (schema
+``repro.jax_grid_bench/v1``; validated by ``tools/check_bench.py``).
+Three suites:
 
-    grid,cells,loop_s,jax_warm_s,jax_cold_s,speedup_warm
+``default``
+    The paper's default scenario grid (6 latencies x 5 thread
+    candidates, one LSM default-pairing trace).  The loop side is the
+    real forked worker pipeline; the acceptance bar is warm jax >= 1x.
+``mega``
+    The scale story: 4 engines x n_ssd {1,2} x 128 latencies x
+    {8,16,32,64} threads -- 4096 cells, each engine x device point
+    swept as one jitted grid call (the 2-SSD half uses the matrix
+    device config with IO token clocks).  The loop side runs the
+    identical cells through the same pipeline (this is the slow part
+    of the bench: minutes).  Acceptance bar: warm jax >= 5x.
+``smoke``
+    A seconds-scale slice (one small trace, 8 cells) for CI: same
+    schema, compared against the checked-in baseline ratio by the
+    perf-smoke job with a generous threshold (machine-to-machine noise
+    is expected; a real regression is 5-10x, not 20%).
 
-``loop_s`` uses the default worker-process fan-out (all cores);
-``jax_cold_s`` includes jit compilation, ``jax_warm_s`` is the steady
-state (best of ``--reps``).  The numbers recorded in
-docs/SIMULATION.md's benchmark note come from this script on the repo's
-2-core CI-class container.
+The checked-in ``BENCH_jax_grid.json`` is produced by::
 
-Usage::
+    PYTHONPATH=src python benchmarks/jax_grid_bench.py \
+        --suite default,mega,smoke --out BENCH_jax_grid.json
 
-    PYTHONPATH=src python benchmarks/jax_grid_bench.py
-    PYTHONPATH=src python benchmarks/jax_grid_bench.py --grids 20x8,40x16
+Cold timings include jit compilation; warm is the best of ``--reps``
+repetitions.  Every loop grid is timed before jax is first imported, so
+the pipeline keeps its plain-fork worker start method (see
+``sweep._pick_context``).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
+import sys
 import time
 
 import numpy as np
 
+SCHEMA = "repro.jax_grid_bench/v1"
+US = 1e-6
 
-def _grid_axes(spec: str, candidates_all: tuple[int, ...]):
-    n_lat, n_cand = (int(x) for x in spec.split("x"))
-    lats_us = list(np.round(np.linspace(0.1, 10.0, n_lat), 3))
-    # Interpolate a fine thread axis through the canonical candidate range.
-    cands = sorted({int(round(c)) for c in np.linspace(
-        min(candidates_all), max(candidates_all), n_cand)})
-    return lats_us, cands
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--grids", default="20x8,40x16",
-                    help="comma-separated LATxTHREADS grid sizes")
-    ap.add_argument("--n-ops", type=int, default=5000)
-    ap.add_argument("--reps", type=int, default=3,
-                    help="warm-run repetitions (best is reported)")
-    ap.add_argument("--n-keys", type=int, default=30_000)
-    ap.add_argument("--n-wl-ops", type=int, default=10_000)
-    args = ap.parse_args()
-
-    from repro.core import workloads
-    from repro.core.engines import LSMStore, run_trace
-    from repro.core.sim import US, SimConfig
-    from repro.core.sim.config import DEFAULT_THREAD_CANDIDATES
-    from repro.core.sim.sweep import sweep_latency
-
-    store = LSMStore(args.n_keys)
-    wl = workloads.zipf(args.n_keys, args.n_wl_ops, 0.99, (1, 0), seed=3)
-    tr = run_trace(store, wl)
-    cfg = SimConfig(P=12, seed=7)
-    print(f"# trace: {tr.trace!r}", flush=True)
-    print("grid,cells,loop_s,jax_warm_s,jax_cold_s,speedup_warm")
-
-    # Time every loop-pipeline grid before jax is ever imported: importing
-    # jax switches the pipeline's worker start method off plain fork (see
-    # sweep._pick_context), and the loop backend deserves its fast path.
-    rows = []
-    for spec in args.grids.split(","):
-        lats_us, cands = _grid_axes(spec, DEFAULT_THREAD_CANDIDATES)
-        lats = [l * US for l in lats_us]
-        t0 = time.perf_counter()
-        sweep_latency(cfg, tr.trace, lats, cands, n_ops=args.n_ops)
-        rows.append((spec, lats, cands, time.perf_counter() - t0))
-
-    for spec, lats, cands, t_loop in rows:
-        t0 = time.perf_counter()
-        sweep_latency(cfg, tr.trace, lats, cands, n_ops=args.n_ops,
-                      backend="jax")
-        t_cold = time.perf_counter() - t0
-        t_warm = min(
-            _timed(sweep_latency, cfg, tr.trace, lats, cands,
-                   n_ops=args.n_ops, backend="jax")
-            for _ in range(args.reps)
-        )
-        print(f"{spec},{len(lats) * len(cands)},{t_loop:.2f},{t_warm:.2f},"
-              f"{t_cold:.2f},{t_loop / t_warm:.2f}", flush=True)
+# The mega suite's axes: every registered engine family with a distinct
+# suboperation mix, an n_ssd axis (plain single-SSD config vs. the
+# matrix 2-SSD device config with IO token clocks), a fine latency
+# axis, and the pow2 thread candidates that bucket into one (G, 64)
+# grid call per engine x device point.
+MEGA_ENGINES = ("lsm", "hash-index", "tree-index", "two-tier-cache")
+MEGA_N_SSD = (1, 2)
+MEGA_N_LATS = 128
+MEGA_CANDS = (8, 16, 32, 64)
+MEGA_N_OPS = 2000
 
 
 def _timed(fn, *a, **kw) -> float:
     t0 = time.perf_counter()
     fn(*a, **kw)
     return time.perf_counter() - t0
+
+
+def _trace(engine: str, n_keys: int, n_wl_ops: int):
+    """The engine's default-pairing zipf trace (compiled)."""
+    from repro.core import workloads
+    from repro.core.engines import available_engines, run_trace
+
+    store = available_engines()[engine](n_keys)
+    wl = workloads.zipf(n_keys, n_wl_ops, 0.99, (1, 0), seed=3)
+    return run_trace(store, wl).trace
+
+
+def _suite_specs(suite: str, args):
+    """The grids of one suite: (name, engine, dev_kwargs, trace_params,
+    lats, cands, n_ops) tuples."""
+    from repro.core.experiment import Scenario
+
+    if suite == "default":
+        sc = Scenario(engine="lsm")
+        return [("default", "lsm", {},
+                 (args.n_keys, args.n_wl_ops),
+                 [l * US for l in sc.latencies_us],
+                 list(sc.thread_candidates), args.n_ops)]
+    if suite == "mega":
+        lats = [float(l) * US for l in
+                np.round(np.linspace(0.1, 10.0, MEGA_N_LATS), 4)]
+        devs = {1: {},
+                2: dict(n_ssd=2, R_io=250e3, L_switch=0.3 * US)}
+        return [(f"mega:{eng}:ssd{n_ssd}", eng, devs[n_ssd],
+                 (args.n_keys, args.n_wl_ops),
+                 lats, list(MEGA_CANDS), MEGA_N_OPS)
+                for eng in MEGA_ENGINES for n_ssd in MEGA_N_SSD]
+    if suite == "smoke":
+        return [("smoke", "hash-index", {}, (4_000, 1_500),
+                 [l * US for l in (0.5, 2, 5, 9)], [8, 16], 800)]
+    raise SystemExit(f"unknown suite {suite!r} "
+                     "(valid: default, mega, smoke)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="default",
+                    help="comma-separated: default, mega, smoke")
+    ap.add_argument("--out", default=None, metavar="OUT.json",
+                    help="write the measurement JSON here (default: "
+                         "print to stdout)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="warm-run repetitions (best is reported)")
+    ap.add_argument("--n-ops", type=int, default=5000,
+                    help="measured ops per cell (default suite)")
+    ap.add_argument("--n-keys", type=int, default=30_000)
+    ap.add_argument("--n-wl-ops", type=int, default=10_000)
+    args = ap.parse_args()
+
+    # The perf contract: jax timings use XLA's legacy inline CPU runtime
+    # (process-global, so it must be exported before jax initializes --
+    # which is also why the loop side runs first, before any jax import).
+    os.environ.setdefault("REPRO_JAX_LEGACY_CPU", "1")
+
+    from repro.core.sim import SimConfig
+    from repro.core.sim.sweep import sweep_latency
+
+    specs = []
+    for suite in args.suite.split(","):
+        specs.extend(_suite_specs(suite.strip(), args))
+
+    traces = {}
+    for _name, eng, _dev, (nk, nw), *_rest in specs:
+        if (eng, nk, nw) not in traces:
+            traces[(eng, nk, nw)] = _trace(eng, nk, nw)
+
+    # Loop side first, before jax is ever imported (keeps the pipeline's
+    # plain-fork workers).  The pipeline is timed end to end, exactly as
+    # a user would run it.
+    entries = []
+    for name, eng, dev, (nk, nw), lats, cands, n_ops in specs:
+        cfg = SimConfig(P=12, seed=7, **dev)
+        tr = traces[(eng, nk, nw)]
+        t_loop = _timed(sweep_latency, cfg, tr, lats, cands, n_ops=n_ops)
+        entries.append({
+            "name": name, "engine": eng, "n_ssd": cfg.n_ssd,
+            "n_latencies": len(lats), "n_threads": len(cands),
+            "cells": len(lats) * len(cands), "n_ops": n_ops,
+            "loop_s": round(t_loop, 4), "loop_mode": "pipeline",
+        })
+        print(f"# {name}: loop pipeline {t_loop:.2f}s "
+              f"({len(lats) * len(cands)} cells)", file=sys.stderr,
+              flush=True)
+
+    for entry, (name, eng, dev, (nk, nw), lats, cands, n_ops) \
+            in zip(entries, specs):
+        cfg = SimConfig(P=12, seed=7, **dev)
+        tr = traces[(eng, nk, nw)]
+        t_cold = _timed(sweep_latency, cfg, tr, lats, cands, n_ops=n_ops,
+                        backend="jax")
+        t_warm = min(
+            _timed(sweep_latency, cfg, tr, lats, cands, n_ops=n_ops,
+                   backend="jax")
+            for _ in range(args.reps))
+        entry["jax_cold_s"] = round(t_cold, 4)
+        entry["jax_warm_s"] = round(t_warm, 4)
+        entry["warm_speedup"] = round(entry["loop_s"] / t_warm, 3)
+        print(f"# {name}: jax cold {t_cold:.2f}s warm {t_warm:.2f}s "
+              f"-> {entry['warm_speedup']:.2f}x", file=sys.stderr,
+              flush=True)
+
+    import jax
+
+    def _agg(prefix):
+        sel = [e for e in entries if e["name"].startswith(prefix)]
+        if not sel:
+            return None
+        loop = sum(e["loop_s"] for e in sel)
+        warm = sum(e["jax_warm_s"] for e in sel)
+        return {"cells": sum(e["cells"] for e in sel),
+                "loop_s": round(loop, 4), "jax_warm_s": round(warm, 4),
+                "warm_speedup": round(loop / warm, 3)}
+
+    doc = {
+        "schema": SCHEMA,
+        "host": {
+            "platform": platform.platform(),
+            "machine": platform.machine(),
+            "cpu_count": os.cpu_count(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+        },
+        "entries": entries,
+        "summary": {k: v for k, v in (
+            ("default", _agg("default")),
+            ("mega", _agg("mega:")),
+            ("smoke", _agg("smoke")),
+        ) if v is not None},
+    }
+    text = json.dumps(doc, indent=2) + "\n"
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"# wrote {args.out}", file=sys.stderr)
+    else:
+        print(text, end="")
 
 
 if __name__ == "__main__":

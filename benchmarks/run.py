@@ -22,7 +22,10 @@ keys include the backend and a code-version salt so stale cells never
 survive code changes), ``--adaptive`` warm-starts the per-point thread
 search from the previous latency point's winner, and ``--backend jax``
 replays a scenario's whole grid as one jitted jax call
-(see ``docs/SIMULATION.md``).  ``--artifact``
+(see ``docs/SIMULATION.md``; ``--backend-pallas`` routes it through the
+fused whole-step scheduler kernel, ``--backend-unroll`` /
+``--backend-substeps`` tune scan unrolling and the steps-per-kernel
+batch).  ``--artifact``
 writes the scenario run's full :class:`~repro.core.experiment.RunArtifact`
 (sweep table + trace stats + model predictions + config provenance) as
 JSON.  ``--engine`` accepts any name or alias in the ``repro.core.engines``
@@ -80,8 +83,13 @@ def emit_artifact(art, prefix: str) -> None:
 def run_scenario_cmd(scenario, artifact_out: str | None,
                      collect_latency: bool, adaptive: bool,
                      backend: str = "loop",
-                     prefix: str | None = None) -> None:
-    """Execute one scenario through the public experiment API."""
+                     prefix: str | None = None,
+                     backend_opts: dict | None = None) -> None:
+    """Execute one scenario through the public experiment API.
+
+    ``backend_opts`` are jax-backend tuning fields of
+    :class:`~repro.core.experiment.RunOptions`
+    (``use_pallas``/``unroll``/``substeps``)."""
     from repro.core.experiment import Experiment
 
     from . import common
@@ -93,7 +101,8 @@ def run_scenario_cmd(scenario, artifact_out: str | None,
         art = Experiment(
             scenario,
             common.run_options(collect_latency=collect_latency,
-                               adaptive=adaptive, backend=backend),
+                               adaptive=adaptive, backend=backend,
+                               **(backend_opts or {})),
         ).run()
     except KeyError as e:  # unknown engine/workload: resolution is lazy and
         sys.exit(str(e.args[0]) if e.args else str(e))  # lists what exists
@@ -125,6 +134,19 @@ def main() -> None:
                          "backend -- 'loop' interpreter cells (default) "
                          "or the vectorized 'jax' grid (one jitted call; "
                          "tolerance-equivalent, see docs/SIMULATION.md)")
+    ap.add_argument("--backend-pallas", action="store_true",
+                    help="with --backend jax: route the grid through the "
+                         "fused whole-step Pallas scheduler kernel "
+                         "(bit-identical to the jnp scan; interpreted "
+                         "off-TPU)")
+    ap.add_argument("--backend-unroll", type=int, default=None, metavar="N",
+                    help="with --backend jax: scan unroll factor of the "
+                         "jnp path (default: sweep_grid's)")
+    ap.add_argument("--backend-substeps", type=int, default=None,
+                    metavar="K",
+                    help="with --backend jax: scheduler steps batched per "
+                         "fused-kernel invocation (must divide the RNG "
+                         "chunk; default: sweep_grid's)")
     ap.add_argument("--scenario", default=None, metavar="SPEC.json",
                     help="run one declarative scenario spec through the "
                          "experiment API instead of the paper figures")
@@ -171,6 +193,17 @@ def main() -> None:
         print(f"sweep-cache: cleared {removed} cell(s) from "
               f"{args.sweep_cache}", file=sys.stderr)
 
+    if args.backend == "jax":
+        # Perf opt-in (see replay_jax._XLA_CPU_FLAGS): the CLI owns the
+        # process, so the legacy CPU runtime is safe here; jax has not
+        # initialized yet because replay_jax is imported lazily per sweep.
+        import os
+
+        os.environ.setdefault("REPRO_JAX_LEGACY_CPU", "1")
+    backend_opts = {"use_pallas": args.backend_pallas,
+                    "unroll": args.backend_unroll,
+                    "substeps": args.backend_substeps}
+
     print("name,us_per_call,derived")
 
     if args.scenario is not None:
@@ -186,7 +219,8 @@ def main() -> None:
         except (ValueError, TypeError, KeyError) as e:
             sys.exit(f"bad scenario spec {args.scenario!r}: {e}")
         run_scenario_cmd(scenario, args.artifact, args.collect_latency,
-                         args.adaptive, args.backend)
+                         args.adaptive, args.backend,
+                         backend_opts=backend_opts)
         return
 
     if args.engine is not None:
@@ -200,7 +234,8 @@ def main() -> None:
             sys.exit(str(e.args[0]) if e.args else str(e))
         run_scenario_cmd(scenario, args.artifact, args.collect_latency,
                          args.adaptive, args.backend,
-                         prefix=f"matrix/{args.engine}/ssd{args.devices}")
+                         prefix=f"matrix/{args.engine}/ssd{args.devices}",
+                         backend_opts=backend_opts)
         return
 
     from . import kernels_bench, paper_figs, roofline_table

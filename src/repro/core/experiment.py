@@ -219,13 +219,18 @@ class RunOptions:
     grid as one jitted scan whose per-cell throughput agrees with the loop
     backend within sampling tolerance, not bit-identically (the scientific
     spec is unchanged -- the measurement apparatus is; see
-    ``docs/SIMULATION.md``)."""
+    ``docs/SIMULATION.md``).  ``use_pallas``/``unroll``/``substeps`` tune
+    how the jax grid executes (fused whole-step kernel, scan unrolling,
+    steps per kernel invocation) without changing any cell value."""
 
     processes: int | None = None       # sweep worker processes (None: auto)
     cache_dir: str | None = None       # on-disk sweep-cell cache
     collect_latency: bool = False      # per-op latencies per winning cell
     adaptive: bool = False             # warm-started thread search
     backend: str = "loop"              # "loop" interpreters | "jax" grid
+    use_pallas: bool = False           # jax: fused whole-step kernel
+    unroll: int | None = None          # jax: jnp scan unroll (None: default)
+    substeps: int | None = None        # jax: steps per kernel invocation
 
 
 @dataclass(frozen=True)
@@ -415,7 +420,8 @@ class Experiment:
             cfg, tr.trace, s.latencies_sec(), s.thread_candidates,
             n_ops=s.n_ops, processes=o.processes, cache_dir=o.cache_dir,
             collect_latency=o.collect_latency, adaptive=o.adaptive,
-            backend=o.backend,
+            backend=o.backend, use_pallas=o.use_pallas, unroll=o.unroll,
+            substeps=o.substeps,
         )
         # Eq. 14 outer IO caps for the model column, matching the scenario's
         # declared device pool (aggregate over the n_ssd per-device rates;

@@ -11,32 +11,32 @@ of a sweep, so an entire Fig. 9-style grid is a single compiled XLA program
 The recurrence
 --------------
 One scan step executes exactly one suboperation of one thread in every grid
-cell.  Per cell the carried state is the single-core scheduler of the
-compiled loop, vectorized:
+cell.  The step body itself lives in :mod:`repro.kernels.sched_step` (the
+fused whole-step scheduler kernel; see that module for the state layout):
 
-  * thread selection: ready threads carry a monotone FIFO *ticket*
-    (their ring position), parked threads their IO *wake* time.  A step
-    wakes the earliest completed parked threads onto the back of the ring
-    in wake order (``ticket = counter++``, up to ``_WAKES_PER_STEP`` of
-    them -- see that constant's comment for why the bound is safe),
-    idle-skips the clock to the earliest wake-up when nothing is
-    runnable, and runs the smallest ticket -- a few ``argmin``
-    reductions, everything else one-hot scatters;
+  * thread selection: ready threads carry a monotone FIFO *stamp* with
+    their thread id packed into the low mantissa bits, so a single ``min``
+    reduction pops the ring head -- no ``argmin`` anywhere in the step;
+  * wake drain: every parked thread whose IO completed re-joins the back
+    of the ring in wake order in one masked pass -- the *exact* drain the
+    loop backends perform, not a bounded-per-step approximation -- and
+    the clock idle-skips to the earliest wake-up when nothing is
+    runnable;
   * MEM stalls against the thread's outstanding prefetch (or a resampled
     latency on an eps-eviction), PREIO submits to the per-device token
     clocks (round-robin striping, jitter, switch hop), op completion pays
     ``T_lock``, and the next suboperation's prefetch is issued against the
     P-deep in-flight window -- all the device arithmetic of
-    :mod:`.devices`, expressed on ``(n_cells, ...)`` arrays;
-  * the prefetch window is a fixed ``(n_cells, P)`` array of completion
-    times: entries ``<= now`` are free slots (the loop backends' lazily
-    drained heap), the replacement slot is the argmin, and the
-    all-in-flight delay is the row minimum.
+    :mod:`.devices`, expressed on ``(n_cells, ...)`` arrays.
 
 Cells that complete their measured ops latch their measurement (the
 counters stop; the simulation harmlessly idles on) while the scan drains
 the slower cells; the scan length is a worst-case bound computed from the
-trace's op-length prefix sums, so no cell can run out of steps.
+trace's op-length prefix sums, so no cell can run out of steps.  Grids
+whose thread candidates span a wide range are split into power-of-two
+thread *buckets* so small-thread cells do not pay the widest cell's
+``T_max`` padding (per-cell RNG purity makes the split invisible to
+results).
 
 Exactness
 ---------
@@ -51,19 +51,25 @@ per-cell bound on the paper's default grid is enforced at
 latencies and single-core configs only; ``sweep_latency(backend="jax")``
 routes mixture latencies through the loop backend per-cell.
 
-The per-step token-clock update can optionally run through the Pallas
-kernel :mod:`repro.kernels.token_clock` (``use_pallas=True``): on TPU that
-compiles the hot update; on CPU it runs in interpreter mode, which is far
-too slow for real sweeps but lets CI validate the kernel bit-for-bit
-against the pure-jnp path on tiny grids.
+``use_pallas=True`` runs the scan through the fused Pallas kernel
+(:func:`repro.kernels.sched_step.fused_steps`): the scheduler planes stay
+resident in VMEM across ``substeps`` inner steps per kernel invocation.
+On TPU that is the compiled fast path; on CPU it runs in interpreter mode,
+which is far too slow for real sweeps but lets CI validate the kernel
+bit-for-bit against the pure-jnp scan on tiny grids.
 
 Everything here is computed in float64 (``jax.experimental.enable_x64``):
 the state mixes ~second-scale clocks with 50 ns context switches, which
-float32 cannot carry.
+float32 cannot carry.  Perf runs on CPU should additionally export
+``REPRO_JAX_LEGACY_CPU=1`` before jax initializes (the benchmark entry
+points do) -- XLA's legacy inline runtime executes this scan ~2-5x
+faster per step than the thunk runtime; see ``_XLA_CPU_FLAGS`` below for
+why it is opt-in rather than the default.
 """
 from __future__ import annotations
 
 import numbers
+import os
 import struct
 import zlib
 from dataclasses import dataclass
@@ -72,11 +78,28 @@ from typing import Sequence
 
 import numpy as np
 
+# Opt-in fast path for perf runs: XLA's legacy inline CPU runtime
+# executes this module's scan body ~2-5x faster per op than the thunk
+# runtime that became the default in jax 0.4.32 (command-buffer dispatch
+# overhead on many small fused ops).  It is NOT enabled by default --
+# XLA flags are process-global, the legacy runtime flushes denormals
+# (FTZ/DAZ), and this library must not change numerics for every other
+# jax user in the process.  Perf entry points (benchmarks/jax_grid_bench
+# and ``benchmarks.run --backend jax``) export REPRO_JAX_LEGACY_CPU=1
+# before jax initializes its CPU client; the sim itself is runtime-
+# agnostic (its only sub-normal-magnitude values, the EPOCH ring
+# tickets, are deliberately normal floats).
+_XLA_CPU_FLAGS = "--xla_cpu_use_thunk_runtime=false"
+if os.environ.get("REPRO_JAX_LEGACY_CPU"):
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_cpu_use_thunk_runtime" not in _flags:
+        os.environ["XLA_FLAGS"] = (_flags + " " + _XLA_CPU_FLAGS).strip()
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
-from ..trace_ir import CPU, MEM, PREIO, CompiledTrace
+from ..trace_ir import CPU, CompiledTrace
 from .config import SimConfig, SimResult
 
 __all__ = ["TraceArrays", "GridResult", "sweep_grid", "lower_trace"]
@@ -157,7 +180,7 @@ class GridResult:
     mem_stall_total: np.ndarray
     mem_accesses: np.ndarray
     ops: int                      # measured ops per cell (same for all)
-    steps: int                    # scan length the grid compiled to
+    steps: int                    # scan length (max across thread buckets)
 
     def result(self, li: int, ci: int) -> SimResult:
         """One cell as a :class:`SimResult` (no per-op latency columns --
@@ -214,41 +237,26 @@ def _make_flags(cfg: SimConfig) -> dict:
     )
 
 
-def _tok_fn(use_pallas: bool):
-    if use_pallas:
-        from repro.kernels.token_clock import token_clock_update
-        return token_clock_update
-    from repro.kernels.token_clock import token_clock_update_ref
-    return token_clock_update_ref
-
-
 _RNG_CHUNK = 1024   # steps per generated uniform block (memory/dispatch knob)
-
-# IO wake-ups processed per scan step.  The loop backends drain *every*
-# completed parked thread at each scheduler iteration; the scan wakes a
-# bounded number and defers the rest one step, which only matters when
-# several IO completions land inside one suboperation's span.  Arrival
-# rates are well below 1 wake/step (<= S / subops-per-op, at most ~1/3
-# for the IO-densest engine), so a small constant keeps the deferral
-# probability -- and its throughput bias -- negligible for every
-# registered engine (tests/test_replay_jax.py enforces the 1% budget).
-_WAKES_PER_STEP = 3
 
 
 @partial(jax.jit, static_argnames=(
-    "T_max", "P", "n_ssd", "steps", "unroll", "use_pallas", "has_eps",
-    "has_rho", "has_jitter", "has_rio", "has_bio", "has_bmem", "has_lock"))
+    "T_max", "P", "n_ssd", "steps", "unroll", "substeps", "use_pallas",
+    "has_eps", "has_rho", "has_jitter", "has_rio", "has_bio", "has_bmem",
+    "has_lock"))
 def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
               L_mem_g, nthr_g, warm_g, n_ops, dyn, key, stream_ids, *,
-              T_max, P, n_ssd, steps, unroll, use_pallas,
+              T_max, P, n_ssd, steps, unroll, substeps, use_pallas,
               has_eps, has_rho, has_jitter, has_rio, has_bio, has_bmem,
               has_lock):
+    from repro.kernels import sched_step as sk
+
     has_io_clock = has_rio or has_bio
     f = jnp.float64
     i4 = jnp.int32
     G = L_mem_g.shape[0]
-    (T_sw, eps, rho, L_dram, L_io, jitter, inv_R, cost_bw_io, L_switch,
-     cost_bmem, T_lock) = dyn
+
+    rho, L_dram = dyn[2], dyn[3]
 
     def lmem(u, L):
         """sample_lmem for scalar latencies: DRAM-tier short-circuit."""
@@ -256,9 +264,11 @@ def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
             return jnp.where(u >= rho, L_dram, L)
         return L
 
-    # Packed trace columns: one gather serves (kind, dur) / (start, end).
+    # Packed trace columns: one gather serves (kind, dur) / (start, end);
+    # op bounds are carried as exact f64 integers so a thread's (i, end)
+    # pair packs into a single span scalar (see sched_step.pack_span).
     kd = jnp.stack([kinds.astype(f), durs], axis=1)          # (n_subops, 2)
-    se = jnp.stack([op_starts, op_ends], axis=1)             # (n_ops, 2)
+    se = jnp.stack([op_starts.astype(f), op_ends.astype(f)], axis=1)
 
     # Uniform draws actually consumed per step, in consumption order (the
     # static flags decide): eps-eviction test + its resample, IO jitter,
@@ -271,11 +281,11 @@ def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
     # Every draw derives from fold_in(key, stream_id) where the stream id
     # hashes the cell's (L_mem, n_threads) identity -- NOT its position or
     # the batch size -- so a cell's numbers are identical whether it runs
-    # alone, inside the full grid, or as the cache-miss remainder of a
-    # partially memoized sweep (the cell cache requires cell values to be
-    # a pure function of their key).  Per-thread init draws fold in the
-    # thread index individually for the same reason: they must not depend
-    # on the batch's T_max padding.
+    # alone, inside the full grid, as a thread bucket of a wider sweep, or
+    # as the cache-miss remainder of a partially memoized sweep (the cell
+    # cache requires cell values to be a pure function of their key).
+    # Per-thread init draws fold in the thread index individually for the
+    # same reason: they must not depend on the batch's T_max padding.
     cell_keys = jax.vmap(jax.random.fold_in, (None, 0))(key, stream_ids)
     k_chunks = jax.vmap(lambda k: jax.random.fold_in(k, 1))(cell_keys)
     tids = jnp.arange(T_max, dtype=i4)
@@ -290,188 +300,46 @@ def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
                                      dtype=f))(tids))(cell_keys)  # (G, T, 2)
     pf0 = u_thread[:, :, 0] * lmem(u_thread[:, :, 1], L_mem_g[:, None])
 
-    # Per-cell scalar state lives in two packed (G, k) arrays: every carried
-    # array is a materialization point for XLA's fuser, so fewer/wider
-    # carries mean fewer tiny kernels per step.  Column layouts:
-    #   cf: 0 now, 1 FIFO ticket counter, 2 prefetch bandwidth clock,
-    #       3 lock clock, 4 t_start, 5 t_end, 6 measured stall seconds
-    #   ci: 0 trace cursor, 1 IO round-robin, 2 completed ops, 3 measured
-    #       ops, 4 measured MEM accesses, 5 measuring flag (0/1)
-    #
-    # Per-thread state is (G, T) planes, updated by one-hot scatters only
-    # (XLA keeps those in-place inside the scan, so per-step traffic is
-    # O(G) writes plus the reduction reads):
-    #   pf     -- outstanding prefetch completion time
-    #   ticket -- ready threads' FIFO ring position (+inf while parked);
-    #             a monotone per-cell counter stamps every push
-    #   wake   -- parked threads' IO completion time (+inf while ready)
-    #
-    # Each step re-creates the loop backends' scheduler iteration: wake
-    # the earliest parked thread whose IO completed (it joins the BACK of
-    # the ring: ticket = counter++), idle-skip the clock to the earliest
-    # wake-up when nothing is runnable, then run the ring head (smallest
-    # ticket).  Waking one thread per step instead of draining a batch
-    # only matters when several wake-ups land inside one suboperation's
-    # span -- the later ones join the ring a step late, a rare bounded
-    # one-position slip that is part of the backend's tolerance budget.
-    rows = jnp.arange(G, dtype=i4)
-    state = dict(
-        cf=jnp.zeros((G, 7), f).at[:, 4].set(-1.0).at[:, 1].set(
-            float(T_max)),
-        ci=jnp.stack(
+    # Initial state, in the sched_step layout: active threads populate the
+    # ready ring in tid order (join stamps sit an EPOCH apart just above
+    # time zero -- normal floats, so FTZ cannot collapse them -- and the
+    # tag bits carry the tid), parked/inactive slots hold the BIG
+    # sentinel / +inf.
+    span0 = sk.pack_span(op_starts[opidx0].astype(f),
+                         op_ends[opidx0].astype(f))
+    tids_gt = jnp.broadcast_to(tids[None, :], (G, T_max))
+    slots_p = jnp.arange(P, dtype=i4)[None, :]
+    state = (
+        jnp.zeros((G, 6), f).at[:, 3].set(-1.0),
+        jnp.stack(
             [cursor_init, jnp.zeros(G, i4), jnp.zeros(G, i4),
              jnp.zeros(G, i4), jnp.zeros(G, i4),
              (warm_g <= 0).astype(i4)], axis=1),
-        pf=pf0,
-        ticket=jnp.where(active, tids[None, :].astype(f), jnp.inf),
-        wake=jnp.full((G, T_max), jnp.inf, f),
-        thr_i=jnp.stack([op_starts[opidx0], op_ends[opidx0]], axis=2),
-        pf_slots=jnp.zeros((G, P), f),
+        jnp.where(active,
+                  sk.tag_encode(tids_gt.astype(f) * sk.EPOCH, tids_gt),
+                  sk.BIG),
+        jnp.full((G, T_max), jnp.inf, f),
+        jnp.stack([pf0, span0], axis=2),
+        sk.tag_encode(jnp.broadcast_to(slots_p.astype(f) * sk.EPOCH, (G, P)),
+                      jnp.broadcast_to(slots_p, (G, P))),
     )
     if has_io_clock:
-        state["io_tok"] = jnp.zeros((G, n_ssd), f)
-        state["io_bw"] = jnp.zeros((G, n_ssd), f)
+        state = state + (jnp.zeros((G, n_ssd), f), jnp.zeros((G, n_ssd), f))
 
-    def step(s, u):
-        un = iter(range(n_u))
-        cf, ci = s["cf"], s["ci"]
-        counter = cf[:, 1]
-        counted0 = ci[:, 3]
-        reached = counted0 >= n_ops    # cell already took its last op
+    sub = sk.make_substep(
+        n_u=n_u, n_ssd=n_ssd, has_eps=has_eps, has_rho=has_rho,
+        has_jitter=has_jitter, has_rio=has_rio, has_bio=has_bio,
+        has_bmem=has_bmem, has_lock=has_lock,
+        onehot_updates=use_pallas, eager_wmin=use_pallas)
 
-        # -- wake + idle-skip + pop, in loop-backend order -------------------
-        r_tid = jnp.argmin(s["ticket"], axis=1)
-        r_t = jnp.take_along_axis(s["ticket"], r_tid[:, None], 1)[:, 0]
-        ready_exists = jnp.isfinite(r_t)
-        ticket, wake = s["ticket"], s["wake"]
-        now = cf[:, 0]
-        tid = r_tid
-        for k in range(_WAKES_PER_STEP):
-            w_tid = jnp.argmin(wake, axis=1)
-            w_t = jnp.take_along_axis(wake, w_tid[:, None], 1)[:, 0]
-            if k == 0:
-                # nothing runnable: jump to the earliest IO completion
-                now = jnp.where(ready_exists, now, jnp.maximum(now, w_t))
-                tid = jnp.where(ready_exists, r_tid, w_tid)
-            do_wake = w_t <= now
-            # When nothing is parked w_tid is a bogus all-inf argmin (it
-            # can point at a READY thread), so the no-wake branch must
-            # write the existing values back, never a constant.
-            t_at_w = jnp.take_along_axis(ticket, w_tid[:, None], 1)[:, 0]
-            ticket = ticket.at[rows, w_tid].set(
-                jnp.where(do_wake, counter, t_at_w))
-            wake = wake.at[rows, w_tid].set(
-                jnp.where(do_wake, jnp.inf, w_t))
-            counter = counter + do_wake
-
-        ie = jnp.take_along_axis(s["thr_i"], tid[:, None, None], 1)[:, 0]
-        i, end_tid = ie[:, 0], ie[:, 1]
-        pf_tid0 = jnp.take_along_axis(s["pf"], tid[:, None], 1)[:, 0]
-        kd_i = kd[i]                                 # (G, 2)
-        kind = kd_i[:, 0]
-        dur = kd_i[:, 1]
-
-        # -- MEM: stall on the outstanding prefetch (or an eps re-fetch) -----
-        is_mem = kind == MEM
-        ready_at = pf_tid0
-        if has_eps:
-            u_eps = u[next(un)]
-            u_evict = u[next(un)]
-            ready_at = jnp.where(u_eps < eps,
-                                 now + lmem(u_evict, L_mem_g), ready_at)
-        stall = ready_at - now
-        stalled = is_mem & (stall > 0.0)
-        live = (ci[:, 5] > 0) & ~reached
-        mem_stall = cf[:, 6] + jnp.where(stalled & live, stall, 0.0)
-        mem_acc = ci[:, 4] + (is_mem & live)
-        now = jnp.where(stalled, ready_at, now) + dur
-
-        # -- op completion: counters, measurement window, next op, T_lock ----
-        i2 = i + 1
-        eoo = i2 >= end_tid
-        done = ci[:, 2] + eoo
-        meas_evt = eoo & (done >= warm_g) & ~reached
-        measuring = jnp.maximum(ci[:, 5], meas_evt)
-        counted = counted0 + meas_evt
-        t_start = jnp.where(meas_evt & (cf[:, 4] < 0.0), now, cf[:, 4])
-        se_c = se[ci[:, 0]]                          # (G, 2)
-        ni = jnp.where(eoo, se_c[:, 0], i2)
-        nend = jnp.where(eoo, se_c[:, 1], end_tid)
-        cursor = jnp.where(eoo, (ci[:, 0] + 1) % n_trace, ci[:, 0])
-        lock_next = cf[:, 3]
-        if has_lock:
-            lock_end = jnp.maximum(now, lock_next) + T_lock
-            now = jnp.where(eoo, lock_end, now)
-            lock_next = jnp.where(eoo, lock_end, lock_next)
-
-        # -- PREIO: submit against the striped per-device token clocks -------
-        park = (kind == PREIO) & ~eoo
-        io_rr = ci[:, 1]
-        if not has_io_clock:
-            svc = now
-            io_out = {}
-        elif n_ssd == 1 and not use_pallas:
-            # Inlined single-device clocks (the common matrix config);
-            # clocks only advance for cells actually submitting an IO.
-            io_tok, io_bw = s["io_tok"][:, 0], s["io_bw"][:, 0]
-            svc = now
-            if has_rio:
-                svc = jnp.maximum(svc, io_tok)
-                io_tok = jnp.where(park, svc + inv_R, io_tok)
-            if has_bio:
-                svc = jnp.maximum(svc, io_bw)
-                io_bw = jnp.where(park, svc + cost_bw_io, io_bw)
-            io_out = {"io_tok": io_tok[:, None], "io_bw": io_bw[:, None]}
-        else:
-            devmask = (jnp.arange(n_ssd)[None, :]
-                       == (io_rr % n_ssd)[:, None]) & park[:, None]
-            svc, tok2d, bw2d = _tok_fn(use_pallas)(
-                now, devmask, s["io_tok"], s["io_bw"], inv_R, cost_bw_io)
-            io_out = {"io_tok": tok2d, "io_bw": bw2d}
-            io_rr = io_rr + park
-        lat_io = L_io
-        if has_jitter:
-            lat_io = L_io * (1.0 + jitter * (2.0 * u[next(un)] - 1.0))
-        park_until = svc + lat_io + L_switch
-
-        # -- issue the next suboperation's prefetch (P-deep window) ----------
-        issue = kd[ni][:, 0] == MEM
-        # All P slots in flight <=> the window minimum is still in the
-        # future, so the all-busy delay is just max(now, min slot); the
-        # minimum slot is also the replacement target either way.
-        slot = jnp.argmin(s["pf_slots"], axis=1)
-        slot_min = jnp.take_along_axis(s["pf_slots"], slot[:, None], 1)[:, 0]
-        pstart = jnp.maximum(now, slot_min)
-        pf_bw = cf[:, 2]
-        if has_bmem:
-            pstart = jnp.maximum(pstart, pf_bw)
-            pf_bw = jnp.where(issue, pstart + cost_bmem, pf_bw)
-        u_pf = u[next(un)] if has_rho else None
-        comp = pstart + lmem(u_pf, L_mem_g)
-        pf_slots = s["pf_slots"].at[rows, slot].set(
-            jnp.where(issue, comp, slot_min))
-        pf_tid = jnp.where(issue, comp, pf_tid0)
-
-        # -- yield: context switch, park or re-enter the ready ring ----------
-        now = now + T_sw
-
-        crossed = (counted >= n_ops) & ~reached
-        t_end = jnp.where(crossed, now, cf[:, 5])
-        return dict(
-            cf=jnp.stack([now, counter + 1.0, pf_bw, lock_next, t_start,
-                          t_end, mem_stall], axis=1),
-            ci=jnp.stack([cursor, io_rr, done, counted, mem_acc,
-                          measuring], axis=1),
-            pf=s["pf"].at[rows, tid].set(pf_tid),
-            ticket=ticket.at[rows, tid].set(
-                jnp.where(park, jnp.inf, counter)),
-            wake=wake.at[rows, tid].set(
-                jnp.where(park, jnp.maximum(park_until, now), jnp.inf)),
-            thr_i=s["thr_i"].at[rows, tid].set(
-                jnp.stack([ni, nend], axis=1)),
-            pf_slots=pf_slots,
-            **io_out,
-        ), None
+    if use_pallas:
+        def block(s, ub):
+            return sk.fused_steps(sub, s, ub, kd, se, n_trace, L_mem_g,
+                                  warm_g, n_ops, dyn), None
+    else:
+        def step(s, u):
+            return sub(s, u, kd, se, n_trace, L_mem_g, warm_g, n_ops,
+                       dyn), None
 
     def chunk(s, ck):
         if n_u:
@@ -481,19 +349,35 @@ def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
             us = jnp.moveaxis(us, 0, -1)         # (CH, n_u, G)
         else:
             us = jnp.zeros((_RNG_CHUNK, 0, G), f)
+        if use_pallas:
+            ub = us.reshape(_RNG_CHUNK // substeps, substeps, n_u, G)
+            return jax.lax.scan(block, s, ub)
         return jax.lax.scan(step, s, us, unroll=unroll)
 
     state, _ = jax.lax.scan(
         chunk, state, jnp.arange(steps // _RNG_CHUNK, dtype=i4))
-    cf, ci = state["cf"], state["ci"]
-    elapsed = jnp.maximum(cf[:, 5] - cf[:, 4], 1e-12)
+    cf, ci = state[0], state[1]
+    elapsed = jnp.maximum(cf[:, 4] - cf[:, 3], 1e-12)
     return dict(
         throughput=n_ops / elapsed,
         time=elapsed,
-        mem_stall_total=cf[:, 6],
+        mem_stall_total=cf[:, 5],
         mem_accesses=ci[:, 4],
         counted=ci[:, 3],
     )
+
+
+def _thread_buckets(candidates: Sequence[int]) -> list[list[int]]:
+    """Group candidate indices by the power-of-two ceiling of their thread
+    count, so narrow cells never pay a wide cell's ``T_max`` padding (a
+    16-thread cell in a 128-wide plane does 8x the per-step plane work it
+    needs).  Cells are RNG-pure per (L_mem, n_threads), so bucketing
+    cannot change any cell's result."""
+    groups: dict[int, list[int]] = {}
+    for j, c in enumerate(candidates):
+        b = 1 if c <= 1 else 1 << (c - 1).bit_length()
+        groups.setdefault(b, []).append(j)
+    return [ix for _, ix in sorted(groups.items())]
 
 
 def sweep_grid(
@@ -506,13 +390,22 @@ def sweep_grid(
     *,
     use_pallas: bool = False,
     unroll: int = 2,
+    substeps: int = 8,
+    bucket_threads: bool = True,
 ) -> GridResult:
     """Run the full ``latencies x thread_candidates`` grid in one compiled
-    call; see the module docstring for semantics and exactness.
+    call per thread bucket; see the module docstring for semantics and
+    exactness.
 
     ``cfg`` supplies everything except ``L_mem``/``n_threads`` (the grid
     axes).  Scalar latencies and single-core configs only; ``warmup_ops``
     defaults per cell to ``2 * n_threads``, like the loop backends.
+
+    ``use_pallas`` routes the scan through the fused whole-step kernel
+    (``substeps`` inner steps per kernel invocation); the default jnp scan
+    path uses ``unroll`` to amortize dispatch instead.
+    ``bucket_threads=False`` forces the single-call layout (all candidates
+    padded to one ``T_max``).
     """
     if cfg.n_cores != 1:
         raise ValueError(
@@ -535,26 +428,20 @@ def sweep_grid(
             "the loop backend")
     if min(candidates) < 1:
         raise ValueError(f"thread candidates must be >= 1: {candidates}")
+    if substeps < 1 or _RNG_CHUNK % substeps:
+        raise ValueError(
+            f"substeps must divide the RNG chunk ({_RNG_CHUNK}): "
+            f"{substeps}")
+
+    from repro.kernels.sched_step import SPAN_SHIFT
 
     source = trace if isinstance(trace, CompiledTrace) else trace.to_trace()
     ta = trace if isinstance(trace, TraceArrays) else lower_trace(trace)
-    T_max = max(candidates)
+    if int(ta.op_ends[-1]) >= (1 << SPAN_SHIFT):
+        raise ValueError(
+            f"trace has {int(ta.op_ends[-1])} suboperations; the fused "
+            f"step's span packing supports < 2**{SPAN_SHIFT}")
     n_lat, n_cand = len(latencies), len(candidates)
-    L_mem_g = np.repeat(np.asarray(latencies, dtype=np.float64), n_cand)
-    nthr_g = np.tile(np.asarray(candidates, dtype=np.int32), n_lat)
-    warm_g = (np.full_like(nthr_g, warmup_ops) if warmup_ops is not None
-              else 2 * nthr_g)
-    steps = _steps_bound(source, n_ops, int(warm_g.max()), T_max)
-
-    # Each cell's RNG stream is keyed by its (L_mem, n_threads) VALUES, so
-    # a cell's result never depends on which other cells share the call
-    # (cache purity; see the per-cell RNG comment in _run_grid).
-    stream_ids = np.array(
-        [zlib.crc32(struct.pack("<dq", L, n))
-         for L in np.asarray(latencies, dtype=np.float64)
-         for n in candidates],
-        dtype=np.uint32,
-    )
 
     dyn = (
         cfg.T_sw, cfg.eps, cfg.rho, cfg.L_dram, cfg.L_io, cfg.L_io_jitter,
@@ -564,31 +451,67 @@ def sweep_grid(
         cfg.A_mem / cfg.B_mem if cfg.B_mem > 0.0 else 0.0,
         cfg.T_lock,
     )
-    with enable_x64():
-        out = _run_grid(
-            ta.kinds, ta.durs, ta.op_starts, ta.op_ends,
-            jnp.int32(ta.n_ops),
-            jnp.asarray(L_mem_g), jnp.asarray(nthr_g), jnp.asarray(warm_g),
-            jnp.float64(n_ops),
-            tuple(jnp.float64(d) for d in dyn),
-            jax.random.PRNGKey(cfg.seed),
-            jnp.asarray(stream_ids),
-            T_max=T_max, P=cfg.P, n_ssd=cfg.n_ssd, steps=steps,
-            unroll=unroll, use_pallas=use_pallas, **_make_flags(cfg),
-        )
-        out = {k: np.asarray(v) for k, v in out.items()}
-    if not np.all(out["counted"] >= n_ops):
-        short = int(out["counted"].min())
-        raise RuntimeError(
-            f"jax replay under-ran its step bound ({steps} steps, worst "
-            f"cell counted {short}/{n_ops} ops) -- this is a bug in "
-            "_steps_bound")
+    buckets = (_thread_buckets(candidates) if bucket_threads
+               else [list(range(n_cand))])
+
     shape = (n_lat, n_cand)
+    thr = np.empty(shape)
+    tim = np.empty(shape)
+    stall = np.empty(shape)
+    macc = np.empty(shape, dtype=np.int64)
+    max_steps = 0
+    with enable_x64():
+        for cols in buckets:
+            cand_b = [candidates[j] for j in cols]
+            T_max = max(cand_b)
+            nc = len(cand_b)
+            L_mem_g = np.repeat(np.asarray(latencies, dtype=np.float64), nc)
+            nthr_g = np.tile(np.asarray(cand_b, dtype=np.int32), n_lat)
+            warm_g = (np.full_like(nthr_g, warmup_ops)
+                      if warmup_ops is not None else 2 * nthr_g)
+            steps = _steps_bound(source, n_ops, int(warm_g.max()), T_max)
+            max_steps = max(max_steps, steps)
+
+            # Each cell's RNG stream is keyed by its (L_mem, n_threads)
+            # VALUES, so a cell's result never depends on which other
+            # cells -- or buckets -- share the call (cache purity; see the
+            # per-cell RNG comment in _run_grid).
+            stream_ids = np.array(
+                [zlib.crc32(struct.pack("<dq", L, n))
+                 for L in np.asarray(latencies, dtype=np.float64)
+                 for n in cand_b],
+                dtype=np.uint32,
+            )
+            out = _run_grid(
+                ta.kinds, ta.durs, ta.op_starts, ta.op_ends,
+                jnp.int32(ta.n_ops),
+                jnp.asarray(L_mem_g), jnp.asarray(nthr_g),
+                jnp.asarray(warm_g),
+                jnp.float64(n_ops),
+                tuple(jnp.float64(d) for d in dyn),
+                jax.random.PRNGKey(cfg.seed),
+                jnp.asarray(stream_ids),
+                T_max=T_max, P=cfg.P, n_ssd=cfg.n_ssd, steps=steps,
+                unroll=unroll, substeps=substeps if use_pallas else 0,
+                use_pallas=use_pallas, **_make_flags(cfg),
+            )
+            out = {k: np.asarray(v) for k, v in out.items()}
+            if not np.all(out["counted"] >= n_ops):
+                short = int(out["counted"].min())
+                raise RuntimeError(
+                    f"jax replay under-ran its step bound ({steps} steps, "
+                    f"worst cell counted {short}/{n_ops} ops) -- this is "
+                    "a bug in _steps_bound")
+            bshape = (n_lat, nc)
+            thr[:, cols] = out["throughput"].reshape(bshape)
+            tim[:, cols] = out["time"].reshape(bshape)
+            stall[:, cols] = out["mem_stall_total"].reshape(bshape)
+            macc[:, cols] = out["mem_accesses"].reshape(bshape)
     return GridResult(
-        throughput=out["throughput"].reshape(shape),
-        time=out["time"].reshape(shape),
-        mem_stall_total=out["mem_stall_total"].reshape(shape),
-        mem_accesses=out["mem_accesses"].reshape(shape),
+        throughput=thr,
+        time=tim,
+        mem_stall_total=stall,
+        mem_accesses=macc,
         ops=n_ops,
-        steps=steps,
+        steps=max_steps,
     )

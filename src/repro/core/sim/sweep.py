@@ -128,12 +128,15 @@ def _pick_context(trace, src_fn):
 
 
 def _run_jax_cells(cfg: SimConfig, trace: CompiledTrace, latencies,
-                   candidates, n_ops, warmup_ops, results, todo) -> None:
+                   candidates, n_ops, warmup_ops, results, todo,
+                   jax_opts=None) -> None:
     """Fill ``results[i]`` for every grid index in ``todo`` via the jax
     backend.  All missing scalar-latency cells run as one vectorized grid
     call (:func:`repro.core.sim.replay_jax.sweep_grid`); mixture-latency
     cells (which the jax backend does not model) run through the compiled
-    loop per cell."""
+    loop per cell.  ``jax_opts`` are extra ``sweep_grid`` tuning kwargs
+    (``use_pallas``/``unroll``/``substeps``) -- they select execution
+    strategy, never values."""
     from . import replay_jax   # deferred: jax is a heavyweight import
 
     k = len(candidates)
@@ -147,7 +150,7 @@ def _run_jax_cells(cfg: SimConfig, trace: CompiledTrace, latencies,
     if need_lis:
         grid = replay_jax.sweep_grid(
             cfg, trace, [latencies[li] for li in need_lis], candidates,
-            n_ops, warmup_ops)
+            n_ops, warmup_ops, **(jax_opts or {}))
     row_of = {li: r for r, li in enumerate(need_lis)}
     for i in todo:
         li, ci = divmod(i, k)
@@ -185,10 +188,13 @@ def _code_salt() -> str:
         core = os.path.dirname(here)
         paths = [os.path.join(here, name) for name in _SALT_FILES]
         paths.append(os.path.join(core, "trace_ir.py"))
-        # the jax backend's token-clock arithmetic lives in the kernels
-        # package; its semantics define cached jax cells too
-        paths.append(os.path.join(os.path.dirname(core), "kernels",
-                                  "token_clock.py"))
+        # the jax backend's scheduler/token-clock arithmetic lives in the
+        # kernels package; every kernel source defines cached jax cells
+        # too, so hash the whole directory (sorted: order-stable digest)
+        kdir = os.path.join(os.path.dirname(core), "kernels")
+        paths.extend(sorted(
+            os.path.join(kdir, name) for name in os.listdir(kdir)
+            if name.endswith(".py")))
         h = hashlib.sha1()
         for path in paths:
             with open(path, "rb") as fh:
@@ -282,6 +288,9 @@ def sweep_latency(
     collect_latency: bool = False,
     adaptive: bool = False,
     backend: str = "loop",
+    use_pallas: bool = False,
+    unroll: int | None = None,
+    substeps: int | None = None,
 ) -> list[SweepPoint]:
     """Throughput vs. memory latency with per-point thread optimization.
 
@@ -345,6 +354,14 @@ def sweep_latency(
         callable), a single-core config, and no latency/histogram
         collection; incompatible with ``adaptive=True``.  Cached cells are
         keyed per backend, so the two never answer for each other.
+    use_pallas, unroll, substeps
+        Jax-backend execution tuning, forwarded to
+        :func:`~repro.core.sim.replay_jax.sweep_grid`: ``use_pallas``
+        routes the scan through the fused whole-step kernel (``substeps``
+        inner steps per kernel invocation), ``unroll`` amortizes dispatch
+        on the jnp scan path.  ``None`` keeps ``sweep_grid``'s default.
+        Strategy knobs only -- cell values (and hence cache keys) do not
+        depend on them; ignored by ``backend="loop"``.
 
     Returns one :class:`SweepPoint` per latency, in input order.
     """
@@ -412,8 +429,13 @@ def sweep_latency(
 
     # -- run missing cells ---------------------------------------------------
     if backend == "jax" and todo:
+        jax_opts = {"use_pallas": use_pallas}
+        if unroll is not None:
+            jax_opts["unroll"] = unroll
+        if substeps is not None:
+            jax_opts["substeps"] = substeps
         _run_jax_cells(cfg, trace, latencies, candidates, n_ops,
-                       warmup_ops, results, todo)
+                       warmup_ops, results, todo, jax_opts)
         if use_cache:
             for i in todo:
                 _cache_store(paths[i], results[i])

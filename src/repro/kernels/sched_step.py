@@ -1,0 +1,431 @@
+"""Fused whole-step scheduler kernel (batched over grid cells).
+
+:mod:`repro.core.sim.replay_jax` replays one scheduler *step* -- wake the
+completed parked threads, pop the FIFO ready ring, execute one suboperation
+(MEM stall / PREIO submit / op completion), issue the next prefetch -- for
+every cell of a latency x threads grid at once.  This module is that step,
+factored so the exact same arithmetic runs two ways:
+
+  * :func:`make_substep` builds the pure-jnp step body; the jax backend's
+    ``lax.scan`` path calls it directly (one call per step, ``unroll``
+    amortizing dispatch);
+  * :func:`fused_steps` wraps the same body in a single
+    ``pl.pallas_call`` that keeps all scheduler planes resident in
+    VMEM/registers while an inner ``fori_loop`` executes a batch of K
+    substeps per kernel invocation (the ``substeps`` knob), so the planes
+    do not round-trip through HBM between steps.
+
+The TPU is the compile target; on CPU the kernel runs in ``interpret=True``
+mode (the :mod:`repro.kernels.compat` convention), which is how CI validates
+it bit-for-bit against the jnp path on tiny grids
+(``tests/test_replay_jax.py``).  Bit-identity holds by construction: both
+paths execute ``make_substep``'s ops in the same order; the kernel variant
+only switches the per-row gather/scatter *implementation* to one-hot
+select/merge forms (``onehot_updates``), which produce bit-identical values
+(a one-term masked sum is exact) while staying on the VPU-friendly subset
+of ops.
+
+Tag-encoded minima
+------------------
+``argmin`` is several times the cost of ``min`` on every backend we care
+about (and the old step needed four of them).  Instead, every plane that is
+reduced to "earliest entry + which thread" stores its key with the entry
+*index* packed into the low :data:`TAG_BITS` bits of the float64 mantissa
+(:func:`tag_encode`): a single ``min`` reduction then returns the winning
+key and its index together (:func:`tag_tid`).  Keys are non-negative
+simulated-time stamps whose meaningful differences (>= nanoseconds on a
+seconds-scale clock) dwarf the ``2**TAG_BITS``-ulp tag perturbation, so
+the encoding never reorders distinct keys; exact ties break toward the
+lower index, matching ``argmin`` -- and matching the scalar loop's
+lowest-tid-first drain of simultaneous IO completions.
+
+State layout (the kernel ref contract)
+--------------------------------------
+``G`` cells, ``T`` thread slots, ``P`` prefetch slots, ``S`` SSDs:
+
+  ============  ============  =================================================
+  plane         shape/dtype   contents
+  ============  ============  =================================================
+  ``cf``        (G, 6) f64    0 now, 1 prefetch-bw clock, 2 lock clock,
+                              3 t_start, 4 t_end, 5 measured stall seconds
+  ``ci``        (G, 6) i32    0 trace cursor, 1 IO round-robin, 2 completed
+                              ops, 3 measured ops, 4 measured MEM accesses,
+                              5 measuring flag
+  ``stamp``     (G, T) f64    ready threads' ring ticket: the *pop time*
+                              at which the thread last started a
+                              suboperation (tag-encoded with the tid);
+                              ``BIG`` when parked or inactive
+  ``wake``      (G, T) f64    parked threads' IO completion time
+                              (tag-encoded); ``+inf`` when ready or
+                              inactive.  Threads whose IO completed are
+                              derived into the ring at pop time (see
+                              ``ring_keys``), never written back
+  ``pft``       (G, T, 2) f64 0 outstanding prefetch completion time,
+                              1 trace span ``end * 2**SPAN_SHIFT + i``
+                              (both integers < 2**SPAN_SHIFT: exact)
+  ``pf_slots``  (G, P) f64    P-deep in-flight prefetch window completion
+                              times, tag-encoded with the slot index
+  ``io_tok``    (G, S) f64    per-device IOPS token clocks (clock configs)
+  ``io_bw``     (G, S) f64    per-device bandwidth token clocks
+  ============  ============  =================================================
+
+The K-substep batching contract: one :func:`fused_steps` invocation consumes
+a ``(K, n_u, G)`` block of pre-drawn uniforms and advances the state by
+exactly K substeps -- state crosses the kernel boundary only once per K
+steps, and the uniform feed is the only per-step input, so a scan over
+blocks of K is step-for-step identical to a scan over single steps.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.trace_ir import MEM, PREIO
+
+__all__ = [
+    "TAG_BITS", "SPAN_SHIFT", "BIG", "EPOCH", "tag_encode", "tag_tid",
+    "tag_value",
+    "pack_span", "unpack_span", "make_substep", "fused_steps",
+]
+
+TAG_BITS = 8                       # index bits packed into the mantissa
+_TAG_MASK = np.uint64((1 << TAG_BITS) - 1)
+_KEY_MASK = np.uint64(~_TAG_MASK & 0xFFFFFFFFFFFFFFFF)
+
+# Sentinel for "no entry" (parked/inactive threads in the stamp plane).
+# Finite -- not inf -- so it tag-decodes to thread 0 instead of garbage;
+# real stamps stay far below it.
+BIG = float(
+    (np.float64(1e30).view(np.uint64) & _KEY_MASK).view(np.float64))
+
+SPAN_SHIFT = 26                    # pft span packing: end*2**26 + i, exact
+_SPAN = float(1 << SPAN_SHIFT)     # in f64 while both stay below 2**26
+_INV_SPAN = 1.0 / _SPAN
+
+# Spacing for "time zero, position k" init keys.  The CPU runtimes run
+# with FTZ/DAZ, so a denormal key (e.g. raw-bits ``k``) silently compares
+# equal to 0.0 and the tagged min collapses every initial ring slot onto
+# index 0.  Spacing by the smallest *normal* f64 keeps the init keys
+# ordered, distinct, flush-proof, and far below any real simulated time.
+EPOCH = float(np.finfo(np.float64).tiny)
+
+
+def tag_encode(key, idx):
+    """Pack ``idx`` into the low :data:`TAG_BITS` mantissa bits of ``key``.
+
+    ``key`` must be non-negative and distinct keys must differ by more than
+    ``2**TAG_BITS`` ulps for the order to survive (see module docstring).
+    """
+    bits = jax.lax.bitcast_convert_type(key, jnp.uint64)
+    tag = idx.astype(jnp.uint64) & _TAG_MASK
+    return jax.lax.bitcast_convert_type((bits & _KEY_MASK) | tag,
+                                        jnp.float64)
+
+
+def tag_tid(enc):
+    """The index packed by :func:`tag_encode` (int32)."""
+    bits = jax.lax.bitcast_convert_type(enc, jnp.uint64)
+    return (bits & _TAG_MASK).astype(jnp.int32)
+
+
+def tag_value(enc):
+    """The key with its tag bits cleared (a 256-ulp floor of the original)."""
+    bits = jax.lax.bitcast_convert_type(enc, jnp.uint64)
+    return jax.lax.bitcast_convert_type(bits & _KEY_MASK, jnp.float64)
+
+
+def pack_span(start, end):
+    """``end * 2**SPAN_SHIFT + start`` as exact f64 (both < 2**SPAN_SHIFT)."""
+    return end * _SPAN + start
+
+
+def unpack_span(span):
+    """Inverse of :func:`pack_span` -> ``(i, end)`` as f64 integers."""
+    end = jnp.floor(span * _INV_SPAN)
+    return span - end * _SPAN, end
+
+
+def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
+                 has_bio, has_bmem, has_lock, onehot_updates=False,
+                 eager_wmin=False):
+    """Build the scheduler substep body, specialized on the static config.
+
+    The returned ``substep(state, u, kd, se, n_trace, L_mem_g, warm_g,
+    n_ops, dyn) -> state`` advances every cell by one suboperation
+    execution.  ``state`` is the tuple documented in the module docstring
+    (``io_tok``/``io_bw`` present only when an IO clock is configured);
+    ``u`` is the ``(n_u, G)`` uniform block for this step; ``kd``/``se``
+    are the packed trace columns; ``dyn`` the tuple of dynamic scalars.
+
+    ``onehot_updates`` switches the per-row thread-plane gathers/scatters
+    to bit-identical one-hot select/merge forms (the Pallas kernel's
+    VPU-friendly subset); ``eager_wmin`` always runs the starved-cell
+    idle-skip re-derivation instead of branching on whether any cell is
+    starved (kernels prefer straight-line code; the resulting values are
+    identical either way).
+    """
+    has_io_clock = has_rio or has_bio
+    f = jnp.float64
+    i4 = jnp.int32
+
+    def sel_thread(plane, tid):
+        """``plane[g, tid[g]]`` -- gather, or a one-term masked sum."""
+        if onehot_updates:
+            T = plane.shape[1]
+            hot = jax.lax.broadcasted_iota(i4, (plane.shape[0], T), 1) \
+                == tid[:, None]
+            if plane.ndim == 3:
+                return jnp.sum(jnp.where(hot[:, :, None], plane, 0.0), 1)
+            return jnp.sum(jnp.where(hot, plane, 0.0), 1)
+        if plane.ndim == 3:
+            return jnp.take_along_axis(plane, tid[:, None, None], 1)[:, 0]
+        return jnp.take_along_axis(plane, tid[:, None], 1)[:, 0]
+
+    def upd_thread(plane, tid, val):
+        """``plane.at[g, tid[g]].set(val[g])`` -- scatter or one-hot merge."""
+        if onehot_updates:
+            T = plane.shape[1]
+            hot = jax.lax.broadcasted_iota(i4, (plane.shape[0], T), 1) \
+                == tid[:, None]
+            if plane.ndim == 3:
+                return jnp.where(hot[:, :, None], val[:, None, :], plane)
+            return jnp.where(hot, val[:, None], plane)
+        rows = jnp.arange(plane.shape[0], dtype=i4)
+        return plane.at[rows, tid].set(val)
+
+    def substep(s, u, kd, se, n_trace, L_mem_g, warm_g, n_ops, dyn):
+        (T_sw, eps, rho, L_dram, L_io, jitter, inv_R, cost_bw_io, L_switch,
+         cost_bmem, T_lock) = dyn
+        if has_io_clock:
+            cf, ci, stamp, wake, pft, pf_slots, io_tok, io_bw = s
+        else:
+            cf, ci, stamp, wake, pft, pf_slots = s
+        G, T = stamp.shape
+        un = iter(range(n_u))
+
+        def lmem(uu, L):
+            """sample_lmem for scalar latencies: DRAM-tier short-circuit."""
+            if has_rho:
+                return jnp.where(uu >= rho, L_dram, L)
+            return L
+
+        counted0 = ci[:, 3]
+        reached = counted0 >= n_ops    # cell already took its last op
+        now = cf[:, 0]
+
+        # -- pop the ring head: one tag-encoded min replaces argmin ---------
+        # Ring stamps are *entry tickets*: a thread re-enters the ring
+        # keyed by its pop time, and a parked thread whose IO completed
+        # joins at its wake time -- so the FIFO order is just time
+        # order, and parked-but-complete threads can be *derived* into
+        # the ring at pop time instead of being written back.  The key
+        # plane below stays a temporary the backend fuses into the min
+        # reduction; the materialized wake drain it replaces (two
+        # carried full-plane writes per step) was the single largest
+        # cost of the old step.
+        def ring_keys(now_v):
+            return jnp.where(wake <= now_v[:, None], wake, stamp)
+
+        head = jnp.min(ring_keys(now), axis=1)
+
+        # -- idle-skip: nothing ready, nothing eligible -> jump to the ------
+        # earliest wake-up and re-derive the keys.  Starvation is rare for
+        # healthy thread counts, so the jnp path branches around the second
+        # pass at run time; the kernel path runs it straight-line.  The
+        # values agree either way: a cell that did not starve re-derives
+        # identical keys from an unchanged ``now``.
+        starved = head >= BIG
+
+        def skip(now_v):
+            w_min = jnp.min(wake, axis=1)
+            now2 = jnp.where(starved, jnp.maximum(now_v, w_min), now_v)
+            return now2, jnp.min(ring_keys(now2), axis=1)
+
+        if eager_wmin:
+            now, head = skip(now)
+        else:
+            now, head = jax.lax.cond(
+                jnp.any(starved), lambda: skip(now), lambda: (now, head))
+        tid = tag_tid(head)
+        # The popped thread's next ring ticket.  The scalar loop drains
+        # wake-ups only at iteration start, *after* the previous runner
+        # re-joined the deque -- so a thread woken during the runner's
+        # execution window queues behind it.  Keying the re-entrant
+        # runner by its pop time (not its yield time) reproduces that
+        # order exactly: wakes <= pop time drained at or before this
+        # iteration and sort ahead; later wakes sort behind.
+        ticket = tag_encode(now, tid)
+
+        pft_r = sel_thread(pft, tid)                 # (G, 2)
+        pf_tid0 = pft_r[:, 0]
+        i_f, end_f = unpack_span(pft_r[:, 1])
+        kd_i = kd[i_f.astype(i4)]                    # (G, 2)
+        kind = kd_i[:, 0]
+        dur = kd_i[:, 1]
+
+        # -- MEM: stall on the outstanding prefetch (or an eps re-fetch) ----
+        is_mem = kind == MEM
+        ready_at = pf_tid0
+        if has_eps:
+            u_eps = u[next(un)]
+            u_evict = u[next(un)]
+            ready_at = jnp.where(u_eps < eps,
+                                 now + lmem(u_evict, L_mem_g), ready_at)
+        stall = ready_at - now
+        stalled = is_mem & (stall > 0.0)
+        live = (ci[:, 5] > 0) & ~reached
+        mem_stall = cf[:, 5] + jnp.where(stalled & live, stall, 0.0)
+        mem_acc = ci[:, 4] + (is_mem & live)
+        now = jnp.where(stalled, ready_at, now) + dur
+
+        # -- op completion: counters, measurement window, next op, T_lock ---
+        i2 = i_f + 1.0
+        eoo = i2 >= end_f
+        done = ci[:, 2] + eoo
+        meas_evt = eoo & (done >= warm_g) & ~reached
+        measuring = jnp.maximum(ci[:, 5], meas_evt)
+        counted = counted0 + meas_evt
+        t_start = jnp.where(meas_evt & (cf[:, 3] < 0.0), now, cf[:, 3])
+        se_c = se[ci[:, 0]]                          # (G, 2)
+        span_next = jnp.where(eoo, pack_span(se_c[:, 0], se_c[:, 1]),
+                              pft_r[:, 1] + 1.0)
+        ni = jnp.where(eoo, se_c[:, 0], i2)
+        cursor = jnp.where(eoo, (ci[:, 0] + 1) % n_trace, ci[:, 0])
+        lock_next = cf[:, 2]
+        if has_lock:
+            lock_end = jnp.maximum(now, lock_next) + T_lock
+            now = jnp.where(eoo, lock_end, now)
+            lock_next = jnp.where(eoo, lock_end, lock_next)
+
+        # -- PREIO: submit against the striped per-device token clocks ------
+        park = (kind == PREIO) & ~eoo
+        io_rr = ci[:, 1]
+        if not has_io_clock:
+            svc = now
+            io_out = ()
+        elif n_ssd == 1:
+            # Inlined single-device clocks (the common matrix config);
+            # clocks only advance for cells actually submitting an IO.
+            tok1, bw1 = io_tok[:, 0], io_bw[:, 0]
+            svc = now
+            if has_rio:
+                svc = jnp.maximum(svc, tok1)
+                tok1 = jnp.where(park, svc + inv_R, tok1)
+            if has_bio:
+                svc = jnp.maximum(svc, bw1)
+                bw1 = jnp.where(park, svc + cost_bw_io, bw1)
+            io_out = (tok1[:, None], bw1[:, None])
+        else:
+            from .token_clock import _update
+            devmask = (jax.lax.broadcasted_iota(i4, (G, n_ssd), 1)
+                       == (io_rr % n_ssd)[:, None]) & park[:, None]
+            svc, tok2d, bw2d = _update(
+                now[:, None], devmask, io_tok, io_bw, inv_R, cost_bw_io)
+            svc = svc[:, 0]
+            io_out = (tok2d, bw2d)
+            io_rr = io_rr + park
+        lat_io = L_io
+        if has_jitter:
+            lat_io = L_io * (1.0 + jitter * (2.0 * u[next(un)] - 1.0))
+        park_until = svc + lat_io + L_switch
+
+        # -- issue the next suboperation's prefetch (P-deep window) ---------
+        issue = kd[ni.astype(i4)][:, 0] == MEM
+        # All P slots in flight <=> the window minimum is still in the
+        # future, so the all-busy delay is just max(now, min slot); the
+        # minimum slot is also the replacement target either way.
+        slot_enc = jnp.min(pf_slots, axis=1)
+        slot = tag_tid(slot_enc)
+        slot_min = tag_value(slot_enc)
+        pstart = jnp.maximum(now, slot_min)
+        pf_bw = cf[:, 1]
+        if has_bmem:
+            pstart = jnp.maximum(pstart, pf_bw)
+            pf_bw = jnp.where(issue, pstart + cost_bmem, pf_bw)
+        u_pf = u[next(un)] if has_rho else None
+        comp = pstart + lmem(u_pf, L_mem_g)
+        pf_slots = upd_thread(
+            pf_slots, slot,
+            jnp.where(issue, tag_encode(comp, slot), slot_enc))
+        pf_tid = jnp.where(issue, comp, pf_tid0)
+
+        # -- yield: context switch, park or re-enter the ready ring ---------
+        now = now + T_sw
+        stamp = upd_thread(stamp, tid, jnp.where(park, BIG, ticket))
+        wake = upd_thread(wake, tid,
+                          jnp.where(park,
+                                    tag_encode(jnp.maximum(park_until, now),
+                                               tid),
+                                    jnp.inf))
+        pft = upd_thread(pft, tid, jnp.stack([pf_tid, span_next], axis=1))
+
+        crossed = (counted >= n_ops) & ~reached
+        t_end = jnp.where(crossed, now, cf[:, 4])
+        cf = jnp.stack([now, pf_bw, lock_next, t_start, t_end, mem_stall],
+                       axis=1)
+        ci = jnp.stack([cursor, io_rr, done, counted, mem_acc, measuring],
+                       axis=1)
+        return (cf, ci, stamp, wake, pft, pf_slots) + io_out
+
+    return substep
+
+
+def fused_steps(substep, state, u_block, kd, se, n_trace, L_mem_g, warm_g,
+                n_ops, dyn, *, interpret: bool | None = None):
+    """Advance ``state`` by K substeps in one ``pallas_call`` invocation.
+
+    ``substep`` must come from :func:`make_substep` (built with
+    ``onehot_updates=True, eager_wmin=True`` for the kernel-friendly op
+    subset); ``u_block`` is the ``(K, n_u, G)`` uniform feed.  All planes
+    are kernel refs: they are read once, carried through an in-kernel
+    ``fori_loop`` over the K substeps, and written back once, so on a
+    compiled backend the scheduler state never leaves VMEM between
+    substeps.  ``interpret=None`` auto-selects interpreter mode off-TPU
+    (CPU CI validates bit-identity against the jnp scan path this way).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    K = u_block.shape[0]
+    if u_block.shape[1] == 0:
+        # Draw-free configs (no eps/rho/jitter) consume no uniforms; a
+        # zero-size ref breaks pallas_call, so feed a 1-wide dummy block
+        # the substep never reads.
+        u_block = jnp.zeros((K, 1) + u_block.shape[2:], u_block.dtype)
+    n_state = len(state)
+    dyn_arr = jnp.stack([jnp.asarray(d, jnp.float64) for d in dyn])
+
+    def kernel(*refs):
+        ins = refs[:n_state + 7]
+        outs = refs[n_state + 7:]
+        s0 = tuple(r[:] for r in ins[:n_state])
+        (u_ref, kd_ref, se_ref, ntr_ref, lmem_ref, warm_ref, nops_ref,
+         ) = ins[n_state:n_state + 7]
+        kd_v, se_v = kd_ref[:], se_ref[:]
+        n_trace = ntr_ref[0]
+        L_mem_g, warm_g = lmem_ref[:], warm_ref[:]
+        n_ops = nops_ref[0]
+        dyn_v = tuple(nops_ref[1 + j] for j in range(dyn_arr.shape[0]))
+
+        def body(k, s):
+            return substep(s, u_ref[k], kd_v, se_v, n_trace, L_mem_g,
+                           warm_g, n_ops, dyn_v)
+
+        final = jax.lax.fori_loop(0, K, body, s0)
+        for ref, val in zip(outs, final):
+            ref[:] = val
+
+    # n_ops and the dynamic scalars travel in one small f64 vector; the
+    # trace length is a (1,) i32 ref.
+    scal = jnp.concatenate([jnp.asarray([n_ops], jnp.float64), dyn_arr])
+    out = pl.pallas_call(
+        kernel,
+        out_shape=tuple(
+            jax.ShapeDtypeStruct(s.shape, s.dtype) for s in state),
+        interpret=interpret,
+    )(*state, u_block, kd, se,
+      jnp.asarray(n_trace, jnp.int32).reshape(1),
+      L_mem_g, warm_g, scal)
+    return out

@@ -121,6 +121,45 @@ class TestPallasTokenClock:
         assert np.array_equal(ref.throughput, pal.throughput)
         assert np.array_equal(ref.mem_stall_total, pal.mem_stall_total)
 
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_fused_step_bit_identical_per_engine(self, engine):
+        # Every registered engine produces a different suboperation mix
+        # (MEM chains, PREIO bursts, lock sections); the fused whole-step
+        # kernel must replay each of them bit-for-bit like the jnp scan,
+        # not just within tolerance.
+        sc = default_scenario(engine, n_keys=2_000, n_wl_ops=600)
+        store = available_engines()[engine](sc.n_keys, **sc.engine_kwargs)
+        wname, wkw = sc.resolved_workload()
+        wl = workloads.create_workload(wname, sc.n_keys, sc.n_wl_ops, **wkw)
+        trace = run_trace(store, wl).trace
+        cfg = sc.sim_config()
+        ref = sweep_grid(cfg, trace, [1 * US, 5 * US], [4, 8], n_ops=120)
+        pal = sweep_grid(cfg, trace, [1 * US, 5 * US], [4, 8], n_ops=120,
+                         use_pallas=True, substeps=4)
+        for fld in ("throughput", "time", "mem_stall_total",
+                    "mem_accesses"):
+            assert np.array_equal(getattr(ref, fld), getattr(pal, fld)), fld
+
+    def test_no_jitter_deterministic_exact_match(self, lsm_small):
+        # Every stochastic device feature off -> zero uniforms consumed
+        # per step (the n_u=0 edge of the kernel's uniform-feed contract);
+        # the replay is then a deterministic function of the trace, and
+        # both paths must agree exactly with themselves across calls and
+        # with each other.
+        cfg = SimConfig(P=12, seed=7, L_io_jitter=0.0)
+        assert cfg.eps == 0.0 and cfg.rho == 1.0
+        ref = sweep_grid(cfg, lsm_small.trace, [1 * US, 8 * US], [8, 16],
+                         n_ops=200)
+        again = sweep_grid(cfg, lsm_small.trace, [1 * US, 8 * US], [8, 16],
+                           n_ops=200)
+        pal = sweep_grid(cfg, lsm_small.trace, [1 * US, 8 * US], [8, 16],
+                         n_ops=200, use_pallas=True)
+        assert np.array_equal(ref.throughput, again.throughput)
+        assert np.array_equal(ref.throughput, pal.throughput)
+        assert np.array_equal(ref.time, pal.time)
+        assert np.array_equal(ref.mem_stall_total, pal.mem_stall_total)
+        assert np.array_equal(ref.mem_accesses, pal.mem_accesses)
+
     def test_kernel_unit_grant_semantics(self):
         from repro.kernels.token_clock import (
             token_clock_update,
@@ -285,9 +324,9 @@ class TestSweepIntegration:
         cfg = SimConfig(P=12, seed=7)
         mix = [(5 * US, 0.9), (14 * US, 0.1)]
         (la, lb) = sweep_latency(cfg, lsm_small, [mix, 1 * US], (24,),
-                                 n_ops=2000, processes=1)
+                                 n_ops=5000, processes=1)
         (ja, jb) = sweep_latency(cfg, lsm_small, [mix, 1 * US], (24,),
-                                 n_ops=2000, backend="jax")
+                                 n_ops=5000, backend="jax")
         assert ja.result.throughput == la.result.throughput   # loop-run cell
         assert jb.result.throughput != lb.result.throughput   # jax-run cell
         assert abs(jb.result.throughput - lb.result.throughput) \

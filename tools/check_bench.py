@@ -1,0 +1,170 @@
+#!/usr/bin/env python
+"""Validate ``BENCH_jax_grid.json`` measurements (schema + perf floors).
+
+Two modes::
+
+    python tools/check_bench.py BENCH_jax_grid.json
+        Schema-validate the checked-in baseline and enforce the repo's
+        acceptance floors on whatever suites it contains: warm jax >= 1x
+        the loop pipeline on the paper default grid, >= 5x on a
+        >= 2000-cell mega grid.
+
+    python tools/check_bench.py --fresh smoke.json \
+        --baseline BENCH_jax_grid.json [--max-regress 3.0]
+        CI perf-smoke: schema-validate a freshly measured file and fail
+        if its warm jax/loop ratio regressed by more than
+        ``--max-regress`` x vs the same-named suite in the baseline.
+        The threshold is deliberately generous -- CI machines differ
+        from the machine that produced the baseline; the job exists to
+        catch order-of-magnitude regressions (an accidentally disabled
+        jit, a quadratic step), not 20% noise.
+
+Exit status 0 on success; 1 with a message on any failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = "repro.jax_grid_bench/v1"
+
+_ENTRY_FIELDS = {
+    "name": str, "engine": str, "n_ssd": int, "n_latencies": int,
+    "n_threads": int, "cells": int, "n_ops": int, "loop_s": (int, float),
+    "loop_mode": str, "jax_cold_s": (int, float),
+    "jax_warm_s": (int, float), "warm_speedup": (int, float),
+}
+
+# Acceptance floors enforced on the checked-in baseline.
+DEFAULT_MIN_SPEEDUP = 1.0
+MEGA_MIN_SPEEDUP = 5.0
+MEGA_MIN_CELLS = 2000
+
+
+def fail(msg: str) -> None:
+    sys.exit(f"check_bench: FAIL: {msg}")
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{path}: unreadable or not JSON ({e})")
+    validate_schema(doc, path)
+    return doc
+
+
+def validate_schema(doc: dict, path: str) -> None:
+    if not isinstance(doc, dict) or doc.get("schema") != SCHEMA:
+        fail(f"{path}: schema must be {SCHEMA!r}, "
+             f"got {doc.get('schema') if isinstance(doc, dict) else doc!r}")
+    host = doc.get("host")
+    if not isinstance(host, dict) or "cpu_count" not in host:
+        fail(f"{path}: missing/invalid host block")
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        fail(f"{path}: entries must be a non-empty list")
+    for e in entries:
+        if not isinstance(e, dict):
+            fail(f"{path}: entry is not an object: {e!r}")
+        for field, typ in _ENTRY_FIELDS.items():
+            if field not in e:
+                fail(f"{path}: entry {e.get('name', '?')!r} missing "
+                     f"{field!r}")
+            if not isinstance(e[field], typ) or isinstance(e[field], bool):
+                fail(f"{path}: entry {e['name']!r} field {field!r} has "
+                     f"type {type(e[field]).__name__}")
+        if e["cells"] != e["n_latencies"] * e["n_threads"]:
+            fail(f"{path}: entry {e['name']!r}: cells != lats * threads")
+        for field in ("loop_s", "jax_cold_s", "jax_warm_s",
+                      "warm_speedup"):
+            if e[field] <= 0:
+                fail(f"{path}: entry {e['name']!r}: {field} must be > 0")
+    summary = doc.get("summary")
+    if not isinstance(summary, dict) or not summary:
+        fail(f"{path}: summary must be a non-empty object")
+    for name, agg in summary.items():
+        for field in ("cells", "loop_s", "jax_warm_s", "warm_speedup"):
+            if field not in agg:
+                fail(f"{path}: summary {name!r} missing {field!r}")
+
+
+def check_floors(doc: dict, path: str) -> list[str]:
+    msgs = []
+    summary = doc["summary"]
+    if "default" in summary:
+        s = summary["default"]["warm_speedup"]
+        if s < DEFAULT_MIN_SPEEDUP:
+            fail(f"{path}: default-grid warm speedup {s}x is below the "
+                 f"{DEFAULT_MIN_SPEEDUP}x floor")
+        msgs.append(f"default grid: {s}x (floor {DEFAULT_MIN_SPEEDUP}x)")
+    if "mega" in summary:
+        s, cells = (summary["mega"]["warm_speedup"],
+                    summary["mega"]["cells"])
+        if cells < MEGA_MIN_CELLS:
+            fail(f"{path}: mega suite has {cells} cells "
+                 f"(< {MEGA_MIN_CELLS})")
+        if s < MEGA_MIN_SPEEDUP:
+            fail(f"{path}: mega-grid warm speedup {s}x is below the "
+                 f"{MEGA_MIN_SPEEDUP}x floor")
+        msgs.append(f"mega grid: {s}x over {cells} cells "
+                    f"(floor {MEGA_MIN_SPEEDUP}x)")
+    return msgs
+
+
+def check_regression(fresh: dict, base: dict, max_regress: float) -> list:
+    msgs = []
+    base_sum = base["summary"]
+    compared = 0
+    for name, agg in fresh["summary"].items():
+        if name not in base_sum:
+            continue
+        compared += 1
+        got, ref = agg["warm_speedup"], base_sum[name]["warm_speedup"]
+        if got * max_regress < ref:
+            fail(f"suite {name!r}: warm speedup {got}x vs baseline "
+                 f"{ref}x -- regressed more than {max_regress}x")
+        msgs.append(f"{name}: {got}x vs baseline {ref}x "
+                    f"(allowed >= {ref / max_regress:.2f}x)")
+    if not compared:
+        fail("fresh file shares no suite with the baseline "
+             f"(fresh: {sorted(fresh['summary'])}, "
+             f"baseline: {sorted(base_sum)})")
+    return msgs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline_pos", nargs="?", default=None,
+                    metavar="BENCH.json",
+                    help="baseline to schema-validate and floor-check")
+    ap.add_argument("--fresh", default=None, metavar="NEW.json",
+                    help="freshly measured file to compare vs --baseline")
+    ap.add_argument("--baseline", default=None, metavar="BENCH.json")
+    ap.add_argument("--max-regress", type=float, default=3.0,
+                    help="max allowed warm-speedup regression factor "
+                         "(default 3.0)")
+    args = ap.parse_args()
+
+    baseline_path = args.baseline or args.baseline_pos
+    if baseline_path is None:
+        ap.error("need a baseline file (positional or --baseline)")
+    base = load(baseline_path)
+    msgs = [f"{baseline_path}: schema ok "
+            f"({len(base['entries'])} entries)"]
+    msgs += check_floors(base, baseline_path)
+
+    if args.fresh:
+        fresh = load(args.fresh)
+        msgs.append(f"{args.fresh}: schema ok")
+        msgs += check_regression(fresh, base, args.max_regress)
+
+    for m in msgs:
+        print(f"check_bench: {m}")
+    print("check_bench: OK")
+
+
+if __name__ == "__main__":
+    main()
