@@ -17,6 +17,15 @@ Three suites:
     device config with IO token clocks).  The loop side runs the
     identical cells through the same pipeline (this is the slow part
     of the bench: minutes).  Acceptance bar: warm jax >= 5x.
+``het``
+    The cohort story: one engine, 64 latencies x a maximally *uneven*
+    thread axis (8..128) -- the monolithic single-scan layout (every
+    cell padded to 128 threads, all scanned to the global worst-case
+    step bound) against the cohort early-exit scan that buckets cells
+    by thread width and step bound.  Records ``jax_mono_warm_s`` /
+    ``mono_speedup`` (cohort vs. monolithic on identical cells) and the
+    wasted-step counters (``cell_steps_bound`` vs ``cell_steps_run``).
+    Acceptance bar: cohort >= 1.5x monolithic.
 ``smoke``
     A seconds-scale slice (one small trace, 8 cells) for CI: same
     schema, compared against the checked-in baseline ratio by the
@@ -26,7 +35,7 @@ Three suites:
 The checked-in ``BENCH_jax_grid.json`` is produced by::
 
     PYTHONPATH=src python benchmarks/jax_grid_bench.py \
-        --suite default,mega,smoke --out BENCH_jax_grid.json
+        --suite default,mega,het,smoke --out BENCH_jax_grid.json
 
 Cold timings include jit compilation; warm is the best of ``--reps``
 repetitions.  Every loop grid is timed before jax is first imported, so
@@ -57,6 +66,14 @@ MEGA_N_SSD = (1, 2)
 MEGA_N_LATS = 128
 MEGA_CANDS = (8, 16, 32, 64)
 MEGA_N_OPS = 2000
+
+# The het suite's axes: a deliberately uneven thread spread (16x between
+# the narrowest and widest cell, straddling five pow2 buckets) so the
+# monolithic layout's padding-to-T_max and global step bound are maximally
+# wasteful -- the structure the cohort scan exists to avoid.
+HET_N_LATS = 64
+HET_CANDS = (8, 16, 24, 32, 48, 64, 96, 128)
+HET_N_OPS = 2000
 
 
 def _timed(fn, *a, **kw) -> float:
@@ -95,11 +112,17 @@ def _suite_specs(suite: str, args):
                  (args.n_keys, args.n_wl_ops),
                  lats, list(MEGA_CANDS), MEGA_N_OPS)
                 for eng in MEGA_ENGINES for n_ssd in MEGA_N_SSD]
+    if suite == "het":
+        lats = [float(l) * US for l in
+                np.round(np.linspace(0.1, 10.0, HET_N_LATS), 4)]
+        return [("het:lsm", "lsm", {},
+                 (args.n_keys, args.n_wl_ops),
+                 lats, list(HET_CANDS), HET_N_OPS)]
     if suite == "smoke":
         return [("smoke", "hash-index", {}, (4_000, 1_500),
                  [l * US for l in (0.5, 2, 5, 9)], [8, 16], 800)]
     raise SystemExit(f"unknown suite {suite!r} "
-                     "(valid: default, mega, smoke)")
+                     "(valid: default, mega, het, smoke)")
 
 
 def main() -> None:
@@ -169,6 +192,35 @@ def main() -> None:
               f"-> {entry['warm_speedup']:.2f}x", file=sys.stderr,
               flush=True)
 
+        if name.startswith("het"):
+            # Cohort vs. monolithic on identical cells, both through
+            # sweep_grid directly so the comparison excludes the (shared,
+            # tiny) sweep_latency wrapper.  bucket_threads=False +
+            # early_exit=False is exactly the pre-cohort single-scan
+            # layout: one T_max-wide plane, one global step bound.
+            from repro.core.sim.replay_jax import sweep_grid
+
+            g = sweep_grid(cfg, tr, lats, cands, n_ops=n_ops)
+            t_coh = min(_timed(sweep_grid, cfg, tr, lats, cands,
+                               n_ops=n_ops) for _ in range(args.reps))
+            _timed(sweep_grid, cfg, tr, lats, cands, n_ops=n_ops,
+                   bucket_threads=False, early_exit=False)  # mono compile
+            t_mono = min(_timed(sweep_grid, cfg, tr, lats, cands,
+                                n_ops=n_ops, bucket_threads=False,
+                                early_exit=False)
+                         for _ in range(args.reps))
+            entry["jax_cohort_warm_s"] = round(t_coh, 4)
+            entry["jax_mono_warm_s"] = round(t_mono, 4)
+            entry["mono_speedup"] = round(t_mono / t_coh, 3)
+            entry["cell_steps_bound"] = int(g.cell_steps_bound)
+            entry["cell_steps_run"] = int(g.cell_steps_run)
+            saved = 1.0 - g.cell_steps_run / max(g.cell_steps_bound, 1)
+            entry["steps_saved_frac"] = round(saved, 4)
+            print(f"# {name}: cohort {t_coh:.2f}s vs monolithic "
+                  f"{t_mono:.2f}s -> {entry['mono_speedup']:.2f}x "
+                  f"(early exit saved {saved:.1%} of bounded steps)",
+                  file=sys.stderr, flush=True)
+
     import jax
 
     def _agg(prefix):
@@ -194,9 +246,22 @@ def main() -> None:
         "summary": {k: v for k, v in (
             ("default", _agg("default")),
             ("mega", _agg("mega:")),
+            ("het", _agg("het")),
             ("smoke", _agg("smoke")),
         ) if v is not None},
     }
+    het_sel = [e for e in entries if e["name"].startswith("het")]
+    if het_sel:
+        coh = sum(e["jax_cohort_warm_s"] for e in het_sel)
+        mono = sum(e["jax_mono_warm_s"] for e in het_sel)
+        bound = sum(e["cell_steps_bound"] for e in het_sel)
+        run = sum(e["cell_steps_run"] for e in het_sel)
+        doc["summary"]["het"].update(
+            jax_cohort_warm_s=round(coh, 4),
+            jax_mono_warm_s=round(mono, 4),
+            mono_speedup=round(mono / coh, 3),
+            steps_saved_frac=round(1.0 - run / max(bound, 1), 4),
+        )
     text = json.dumps(doc, indent=2) + "\n"
     if args.out:
         with open(args.out, "w") as f:

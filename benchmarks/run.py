@@ -17,7 +17,9 @@
 Latency sweeps go through the batched :func:`repro.core.sim.sweep_latency`
 pipeline; ``--processes`` sets the worker-process count for the grid,
 ``--sweep-cache`` memoizes finished sweep cells on disk so repeated runs
-only simulate what changed (``--sweep-cache-clear`` empties it first; cell
+only simulate what changed (``--sweep-cache-clear`` empties it first;
+``--sweep-cache-prune MB`` / ``--sweep-cache-prune-days D`` evict
+least-recently-used cells instead of everything; cell
 keys include the backend and a code-version salt so stale cells never
 survive code changes), ``--adaptive`` warm-starts the per-point thread
 search from the previous latency point's winner, and ``--backend jax``
@@ -25,13 +27,15 @@ replays a scenario's whole grid as one jitted jax call
 (see ``docs/SIMULATION.md``; ``--backend-pallas`` routes it through the
 fused whole-step scheduler kernel, ``--backend-unroll`` /
 ``--backend-substeps`` tune scan unrolling and the steps-per-kernel
-batch).  ``--artifact``
+batch, ``--backend-host-devices`` shards the grid's cells over XLA host
+CPU devices).  ``--artifact``
 writes the scenario run's full :class:`~repro.core.experiment.RunArtifact`
 (sweep table + trace stats + model predictions + config provenance) as
 JSON.  ``--engine`` accepts any name or alias in the ``repro.core.engines``
 registry (underscores work: ``hash_index`` == ``hash-index``); ``--devices``
 sets the simulated SSD count (per-device IOPS token clocks, round-robin
-striping, switch fan-out hop).
+striping, switch fan-out hop) and ``--cores`` the simulated host CPU core
+count (per-core run queues; thread candidates are per core).
 """
 from __future__ import annotations
 
@@ -89,7 +93,7 @@ def run_scenario_cmd(scenario, artifact_out: str | None,
 
     ``backend_opts`` are jax-backend tuning fields of
     :class:`~repro.core.experiment.RunOptions`
-    (``use_pallas``/``unroll``/``substeps``)."""
+    (``use_pallas``/``unroll``/``substeps``/``host_devices``)."""
     from repro.core.experiment import Experiment
 
     from . import common
@@ -129,6 +133,17 @@ def main() -> None:
     ap.add_argument("--sweep-cache-clear", action="store_true",
                     help="with --sweep-cache: delete every memoized cell "
                          "in the cache directory before running")
+    ap.add_argument("--sweep-cache-prune", type=float, default=None,
+                    metavar="MB",
+                    help="with --sweep-cache: before running, evict "
+                         "least-recently-used cells (mtime order; cache "
+                         "hits refresh it) until the cache is at most MB "
+                         "megabytes")
+    ap.add_argument("--sweep-cache-prune-days", type=float, default=None,
+                    metavar="D",
+                    help="with --sweep-cache: before running, drop cells "
+                         "not used in the last D days (combines with "
+                         "--sweep-cache-prune)")
     ap.add_argument("--backend", default="loop", choices=("loop", "jax"),
                     help="with --scenario/--engine: sweep execution "
                          "backend -- 'loop' interpreter cells (default) "
@@ -147,6 +162,13 @@ def main() -> None:
                     help="with --backend jax: scheduler steps batched per "
                          "fused-kernel invocation (must divide the RNG "
                          "chunk; default: sweep_grid's)")
+    ap.add_argument("--backend-host-devices", type=int, default=None,
+                    metavar="N",
+                    help="with --backend jax: shard grid cells over N XLA "
+                         "host CPU devices (requires the process to have "
+                         "been started with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N or more; incompatible with --backend-pallas)")
     ap.add_argument("--scenario", default=None, metavar="SPEC.json",
                     help="run one declarative scenario spec through the "
                          "experiment API instead of the paper figures")
@@ -166,6 +188,9 @@ def main() -> None:
                          "name/alias, e.g. hash_index)")
     ap.add_argument("--devices", type=int, default=1, metavar="N",
                     help="simulated SSD count for --engine (default 1)")
+    ap.add_argument("--cores", type=int, default=1, metavar="N",
+                    help="simulated host CPU cores for --engine "
+                         "(default 1; thread candidates are per core)")
     ap.add_argument("--list-engines", action="store_true",
                     help="print canonical engine registry names and exit")
     ap.add_argument("--list-workloads", action="store_true",
@@ -193,6 +218,23 @@ def main() -> None:
         print(f"sweep-cache: cleared {removed} cell(s) from "
               f"{args.sweep_cache}", file=sys.stderr)
 
+    if (args.sweep_cache_prune is not None
+            or args.sweep_cache_prune_days is not None):
+        if args.sweep_cache is None:
+            sys.exit("--sweep-cache-prune requires --sweep-cache DIR")
+        from repro.core.sim import prune_sweep_cache
+
+        max_bytes = (None if args.sweep_cache_prune is None
+                     else int(args.sweep_cache_prune * 1e6))
+        try:
+            removed = prune_sweep_cache(
+                args.sweep_cache, max_bytes=max_bytes,
+                max_age_days=args.sweep_cache_prune_days)
+        except ValueError as e:
+            sys.exit(str(e))
+        print(f"sweep-cache: pruned {removed} cell(s) from "
+              f"{args.sweep_cache}", file=sys.stderr)
+
     if args.backend == "jax":
         # Perf opt-in (see replay_jax._XLA_CPU_FLAGS): the CLI owns the
         # process, so the legacy CPU runtime is safe here; jax has not
@@ -202,7 +244,8 @@ def main() -> None:
         os.environ.setdefault("REPRO_JAX_LEGACY_CPU", "1")
     backend_opts = {"use_pallas": args.backend_pallas,
                     "unroll": args.backend_unroll,
-                    "substeps": args.backend_substeps}
+                    "substeps": args.backend_substeps,
+                    "host_devices": args.backend_host_devices}
 
     print("name,us_per_call,derived")
 
@@ -226,15 +269,21 @@ def main() -> None:
     if args.engine is not None:
         if args.devices < 1:
             sys.exit("--devices must be >= 1")
+        if args.cores < 1:
+            sys.exit("--cores must be >= 1")
         from repro.core.experiment import default_scenario
 
         try:
-            scenario = default_scenario(args.engine, n_ssd=args.devices)
+            scenario = default_scenario(args.engine, n_ssd=args.devices,
+                                        n_cores=args.cores)
         except KeyError as e:  # unknown engine: get_engine lists what exists
             sys.exit(str(e.args[0]) if e.args else str(e))
+        prefix = f"matrix/{args.engine}/ssd{args.devices}"
+        if args.cores > 1:
+            prefix += f"/cores{args.cores}"
         run_scenario_cmd(scenario, args.artifact, args.collect_latency,
                          args.adaptive, args.backend,
-                         prefix=f"matrix/{args.engine}/ssd{args.devices}",
+                         prefix=prefix,
                          backend_opts=backend_opts)
         return
 

@@ -121,6 +121,10 @@ class Scenario:
     R_io: float = 0.0
     B_io: float = 0.0
     L_switch_us: float = 0.0
+    # host spec: CPU cores running the store (thread_candidates are per
+    # core) and the serialized per-op commit window (T_lock)
+    n_cores: int = 1
+    T_lock_us: float = 0.0
     # sweep axes
     latencies_us: tuple = (0.1, 1, 3, 5, 8, 10)
     thread_candidates: tuple = (16, 24, 32, 48, 64)
@@ -142,6 +146,11 @@ class Scenario:
             )
         if self.n_ssd < 1:
             raise ValueError(f"n_ssd must be >= 1, got {self.n_ssd}")
+        if self.n_cores < 1:
+            raise ValueError(f"n_cores must be >= 1, got {self.n_cores}")
+        if self.T_lock_us < 0:
+            raise ValueError(
+                f"T_lock_us must be >= 0, got {self.T_lock_us}")
         for f in ("n_keys", "n_wl_ops", "n_ops"):
             if getattr(self, f) < 1:
                 raise ValueError(f"{f} must be >= 1, got {getattr(self, f)}")
@@ -172,6 +181,7 @@ class Scenario:
             P=self.P, T_sw=self.T_sw_us * US, seed=self.seed,
             n_ssd=self.n_ssd, R_io=self.R_io, B_io=self.B_io,
             L_switch=self.L_switch_us * US if self.n_ssd > 1 else 0.0,
+            n_cores=self.n_cores, T_lock=self.T_lock_us * US,
         )
 
     def latencies_sec(self) -> list:
@@ -219,9 +229,10 @@ class RunOptions:
     grid as one jitted scan whose per-cell throughput agrees with the loop
     backend within sampling tolerance, not bit-identically (the scientific
     spec is unchanged -- the measurement apparatus is; see
-    ``docs/SIMULATION.md``).  ``use_pallas``/``unroll``/``substeps`` tune
-    how the jax grid executes (fused whole-step kernel, scan unrolling,
-    steps per kernel invocation) without changing any cell value."""
+    ``docs/SIMULATION.md``).  ``use_pallas``/``unroll``/``substeps``/
+    ``host_devices`` tune how the jax grid executes (fused whole-step
+    kernel, scan unrolling, steps per kernel invocation, shard_map over
+    host CPU devices) without changing any cell value."""
 
     processes: int | None = None       # sweep worker processes (None: auto)
     cache_dir: str | None = None       # on-disk sweep-cell cache
@@ -231,6 +242,7 @@ class RunOptions:
     use_pallas: bool = False           # jax: fused whole-step kernel
     unroll: int | None = None          # jax: jnp scan unroll (None: default)
     substeps: int | None = None        # jax: steps per kernel invocation
+    host_devices: int | None = None    # jax: shard cells over N host devs
 
 
 @dataclass(frozen=True)
@@ -421,7 +433,7 @@ class Experiment:
             n_ops=s.n_ops, processes=o.processes, cache_dir=o.cache_dir,
             collect_latency=o.collect_latency, adaptive=o.adaptive,
             backend=o.backend, use_pallas=o.use_pallas, unroll=o.unroll,
-            substeps=o.substeps,
+            substeps=o.substeps, host_devices=o.host_devices,
         )
         # Eq. 14 outer IO caps for the model column, matching the scenario's
         # declared device pool (aggregate over the n_ssd per-device rates;

@@ -47,6 +47,7 @@ from .sweep import (  # noqa: F401
     BACKENDS,
     SweepPoint,
     clear_sweep_cache,
+    prune_sweep_cache,
     sweep_latency,
 )
 
@@ -69,4 +70,5 @@ __all__ = [
     "SweepPoint",
     "BACKENDS",
     "clear_sweep_cache",
+    "prune_sweep_cache",
 ]

@@ -46,6 +46,14 @@ class SimConfig:
     seed: int = 0
     collect_load_hist: bool = False
 
+    def __post_init__(self):
+        if self.n_cores < 1:
+            raise ValueError(f"n_cores must be >= 1, got {self.n_cores}")
+        if self.n_threads < 1:
+            raise ValueError(f"n_threads must be >= 1, got {self.n_threads}")
+        if self.T_lock < 0:
+            raise ValueError(f"T_lock must be >= 0, got {self.T_lock}")
+
 
 @dataclass
 class SimResult:

@@ -11,8 +11,10 @@ Two implementations of the same execution model:
     no core heap, inlined scalar latency sampling), and reproduces the
     generic loop's RNG draw order exactly, so its results are bit-identical
     to ``simulate(cfg, trace_source(trace.to_ops()), ...)`` while running
-    several times faster.  Multi-core configs transparently fall back to the
-    generic loop.
+    several times faster.  Multi-core configs run through a compiled
+    multi-core specialization (flat per-core rings/prefetch heaps, same
+    core-heap event order and RNG draw order as the generic loop, so still
+    bit-identical) instead of falling back to the interpreter.
 
 Everything is virtual-time; wall-clock speed is irrelevant to fidelity.
 """
@@ -232,14 +234,15 @@ def simulate_compiled(
     """Fast replay of a :class:`CompiledTrace` (bit-identical to the generic
     loop over ``trace_source(trace.to_ops())``; see module docstring).
 
-    The specialization covers the single-core case with all device features
-    (eps, rho, latency mixtures, per-SSD token clocks with ``n_ssd``
-    round-robin striping, the ``L_switch`` fan-out hop, memory throttle,
-    T_lock); multi-core configs fall back to :func:`simulate`.
+    The specialization covers all device features (eps, rho, latency
+    mixtures, per-SSD token clocks with ``n_ssd`` round-robin striping, the
+    ``L_switch`` fan-out hop, memory throttle, T_lock); multi-core configs
+    route to :func:`_simulate_compiled_multicore`, which keeps the generic
+    loop's core-heap event order and RNG draw order.
     """
     if cfg.n_cores != 1:
-        return simulate(cfg, trace.as_source(), n_ops, warmup_ops,
-                        collect_latency)
+        return _simulate_compiled_multicore(cfg, trace, n_ops, warmup_ops,
+                                            collect_latency)
 
     rng = random.Random(cfg.seed)
     rrandom = rng.random
@@ -433,6 +436,249 @@ def simulate_compiled(
 
     t0 = t_start_measure if t_start_measure is not None else 0.0
     elapsed = max(now - t0, 1e-12)
+    return SimResult(
+        ops=counted,
+        time=elapsed,
+        throughput=counted / elapsed,
+        mem_stall_total=mem_stall,
+        mem_accesses=mem_accesses,
+        op_latencies=op_lat,
+        load_stalls=stalls,
+    )
+
+
+def _simulate_compiled_multicore(
+    cfg: SimConfig,
+    trace: CompiledTrace,
+    n_ops: int,
+    warmup_ops: int | None = None,
+    collect_latency: bool = False,
+) -> SimResult:
+    """Multi-core compiled fast loop, bit-identical to :func:`simulate`.
+
+    A straight transcription of the generic loop's control flow -- the core
+    heap ordered by local clocks, per-core FIFO rings and prefetch units,
+    the shared parked heap / SSD clocks / lock clock / trace cursor -- onto
+    flat lists with the device arithmetic inlined.  Every RNG draw happens
+    at the same point in the same order as the generic loop (per-thread
+    init: one discarded ``randrange`` per fetch then ``random() * sample``;
+    runtime: eps + eviction sample, IO jitter, prefetch sample), so results
+    are byte-for-byte identical, just ~2-3x faster in the interpreter.
+    """
+    rng = random.Random(cfg.seed)
+    rrandom = rng.random
+    rrandrange = rng.randrange
+    n_threads = cfg.n_threads
+    n_cores = cfg.n_cores
+    if warmup_ops is None:
+        warmup_ops = 2 * n_threads * n_cores
+
+    kinds, durs, op_starts, op_ends = trace.as_lists()
+    n_trace = trace.n_ops
+
+    P = cfg.P
+    T_sw = cfg.T_sw
+    T_lock = cfg.T_lock
+    eps = cfg.eps
+    L_io = cfg.L_io
+    jitter = cfg.L_io_jitter
+    R_io = cfg.R_io
+    B_io = cfg.B_io
+    A_io = cfg.A_io
+    B_mem = cfg.B_mem
+    A_mem = cfg.A_mem
+    hist = cfg.collect_load_hist
+
+    simple_mem = cfg.rho >= 1.0 and isinstance(cfg.L_mem, (int, float))
+    lmem_scalar = float(cfg.L_mem) if simple_mem else 0.0
+
+    def sample() -> float:
+        return sample_lmem(cfg, rng)
+
+    cursor = -1
+    total_threads = n_threads * n_cores
+    t_idx = [0] * total_threads
+    t_end = [0] * total_threads
+    t_pf = [0.0] * total_threads
+    t_opstart = [0.0] * total_threads
+
+    ready: list[deque[int]] = [deque() for _ in range(n_cores)]
+    core_now = [0.0] * n_cores
+    pf_inflight: list[list[float]] = [[] for _ in range(n_cores)]
+    pf_bw_next = [0.0] * n_cores
+
+    for cid in range(n_cores):
+        rq = ready[cid]
+        for t in range(n_threads):
+            tid = cid * n_threads + t
+            j = rrandrange(n_trace)
+            if cursor < 0:
+                cursor = j
+            t_idx[tid] = op_starts[cursor]
+            t_end[tid] = op_ends[cursor]
+            cursor = (cursor + 1) % n_trace
+            t_pf[tid] = rrandom() * (lmem_scalar if simple_mem else sample())
+            rq.append(tid)
+
+    n_ssd = cfg.n_ssd
+    if n_ssd < 1:
+        raise ValueError(f"n_ssd must be >= 1, got {n_ssd}")
+    L_switch = cfg.L_switch
+    io_tok_next = [0.0] * n_ssd
+    io_bw_next = [0.0] * n_ssd
+    io_rr = 0
+    lock_next = 0.0
+
+    # Shared parked heap: (wake, seq, cid, tid).  seq breaks wake-time ties
+    # FIFO, matching ParkedHeap's deterministic ordering.
+    parked: list[tuple[float, int, int, int]] = []
+    seq = 0
+    heappush = heapq.heappush
+    heappop = heapq.heappop
+
+    core_heap = [(0.0, cid) for cid in range(n_cores)]
+    heapq.heapify(core_heap)
+
+    done = 0
+    counted = 0
+    t_start_measure = None
+    mem_stall = 0.0
+    mem_accesses = 0
+    op_lat: list[float] = []
+    stalls: list[float] = []
+
+    while counted < n_ops:
+        # Wake threads whose IO completed before the earliest core time.
+        horizon = core_heap[0][0]
+        while parked and parked[0][0] <= horizon:
+            e = heappop(parked)
+            ready[e[2]].append(e[3])
+
+        t_core, cid = heappop(core_heap)
+        now = core_now[cid]
+        if t_core > now:
+            now = t_core
+        rq = ready[cid]
+
+        if not rq:
+            # Idle until this core's earliest parked thread wakes (or re-arm
+            # at the global next wake if this core has none parked).
+            wake = None
+            for e in parked:
+                if e[2] == cid and (wake is None or e[0] < wake):
+                    wake = e[0]
+            if wake is None:
+                if parked:
+                    heappush(core_heap, (parked[0][0], cid))
+                core_now[cid] = now
+                continue
+            if wake > now:
+                now = wake
+            while parked and parked[0][0] <= now:
+                e = heappop(parked)
+                ready[e[2]].append(e[3])
+            if not rq:
+                heappush(core_heap, (now + 1e-9, cid))
+                core_now[cid] = now
+                continue
+
+        tid = rq.popleft()
+        i = t_idx[tid]
+        kind = kinds[i]
+        dur = durs[i]
+
+        if kind == 0:  # MEM
+            if eps > 0.0 and rrandom() < eps:
+                ready_at = now + (lmem_scalar if simple_mem else sample())
+            else:
+                ready_at = t_pf[tid]
+            stall = ready_at - now
+            if stall > 0.0:
+                if done >= warmup_ops:
+                    mem_stall += stall
+                now = ready_at
+            if done >= warmup_ops:
+                if hist:
+                    stalls.append(stall if stall > 0.0 else 0.0)
+                mem_accesses += 1
+            now += dur
+        else:
+            now += dur
+
+        i += 1
+        end_of_op = i >= t_end[tid]
+
+        if end_of_op:
+            done += 1
+            if done >= warmup_ops:
+                if t_start_measure is None:
+                    t_start_measure = now
+                counted += 1
+                if collect_latency:
+                    op_lat.append(now - t_opstart[tid])
+            # Shared cyclic cursor; the discarded rrandrange mirrors
+            # trace_source's one-draw-per-fetch (see simulate_compiled).
+            rrandrange(n_trace)
+            i = op_starts[cursor]
+            t_end[tid] = op_ends[cursor]
+            cursor = (cursor + 1) % n_trace
+            t_opstart[tid] = now
+            if T_lock > 0.0:
+                start = now if now > lock_next else lock_next
+                now = start + T_lock
+                lock_next = now
+
+        park_until = None
+        if kind == 1 and not end_of_op:  # PREIO: shared SSD token clocks
+            dev = io_rr % n_ssd
+            io_rr += 1
+            svc = now
+            if R_io > 0.0:
+                if io_tok_next[dev] > svc:
+                    svc = io_tok_next[dev]
+                io_tok_next[dev] = svc + 1.0 / R_io
+            if B_io > 0.0:
+                if io_bw_next[dev] > svc:
+                    svc = io_bw_next[dev]
+                io_bw_next[dev] = svc + A_io / B_io
+            lat_io = L_io
+            if jitter > 0.0:
+                lat_io *= 1.0 + jitter * (2.0 * rrandom() - 1.0)
+            park_until = svc + lat_io + L_switch
+
+        if kinds[i] == 0:  # next subop is MEM: this core's prefetch unit
+            pq = pf_inflight[cid]
+            while pq and pq[0] <= now:
+                heappop(pq)
+            if len(pq) < P:
+                start = now
+            else:
+                start = now if now > pq[0] else pq[0]
+            if B_mem > 0.0:
+                if pf_bw_next[cid] > start:
+                    start = pf_bw_next[cid]
+                pf_bw_next[cid] = start + A_mem / B_mem
+            comp = start + (lmem_scalar if simple_mem else sample())
+            if len(pq) >= P:
+                heappop(pq)
+            heappush(pq, comp)
+            t_pf[tid] = comp
+
+        now += T_sw
+        t_idx[tid] = i
+        core_now[cid] = now
+
+        if park_until is not None:
+            seq += 1
+            heappush(parked,
+                     (park_until if park_until > now else now, seq, cid, tid))
+        else:
+            rq.append(tid)
+        heappush(core_heap, (now, cid))
+
+    t0 = t_start_measure if t_start_measure is not None else 0.0
+    t_end_time = max(core_now)
+    elapsed = max(t_end_time - t0, 1e-12)
     return SimResult(
         ops=counted,
         time=elapsed,

@@ -73,7 +73,7 @@ import os
 import struct
 import zlib
 from dataclasses import dataclass
-from functools import partial
+from functools import lru_cache, partial
 from typing import Sequence
 
 import numpy as np
@@ -94,6 +94,21 @@ if os.environ.get("REPRO_JAX_LEGACY_CPU"):
     _flags = os.environ.get("XLA_FLAGS", "")
     if "xla_cpu_use_thunk_runtime" not in _flags:
         os.environ["XLA_FLAGS"] = (_flags + " " + _XLA_CPU_FLAGS).strip()
+
+# Host-device sharding opt-in (same contract as REPRO_JAX_LEGACY_CPU:
+# process-global, so only entry points that own the process should set
+# it, *before* jax initializes).  XLA presents the host as N virtual CPU
+# devices; sweep_grid(host_devices=N) then shard_maps cohorts over them
+# so the jax backend uses every container core the way the forked loop
+# pipeline already does.
+_n_host = os.environ.get("REPRO_JAX_HOST_DEVICES", "")
+if _n_host.isdigit() and int(_n_host) > 1:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags +
+            f" --xla_force_host_platform_device_count={int(_n_host)}"
+        ).strip()
 
 import jax
 import jax.numpy as jnp
@@ -173,14 +188,22 @@ def lower_trace(trace: CompiledTrace, bucket: int = 1024) -> TraceArrays:
 
 @dataclass(frozen=True)
 class GridResult:
-    """Per-cell sweep results, shaped ``(n_latencies, n_candidates)``."""
+    """Per-cell sweep results, shaped ``(n_latencies, n_candidates)``.
+
+    ``cell_steps_bound`` / ``cell_steps_run`` sum, over all cells, the
+    scan steps their cohort *scheduled* (the per-cohort worst-case bound)
+    vs. actually *executed* before the cohort's early exit fired -- the
+    difference is the wasted work the early-exit scan no longer pays.
+    """
 
     throughput: np.ndarray
     time: np.ndarray
     mem_stall_total: np.ndarray
     mem_accesses: np.ndarray
     ops: int                      # measured ops per cell (same for all)
-    steps: int                    # scan length (max across thread buckets)
+    steps: int                    # scan length bound (max across cohorts)
+    cell_steps_bound: int = 0     # sum over cells of their cohort's bound
+    cell_steps_run: int = 0       # sum over cells of executed steps
 
     def result(self, li: int, ci: int) -> SimResult:
         """One cell as a :class:`SimResult` (no per-op latency columns --
@@ -240,21 +263,22 @@ def _make_flags(cfg: SimConfig) -> dict:
 _RNG_CHUNK = 1024   # steps per generated uniform block (memory/dispatch knob)
 
 
-@partial(jax.jit, static_argnames=(
-    "T_max", "P", "n_ssd", "steps", "unroll", "substeps", "use_pallas",
-    "has_eps", "has_rho", "has_jitter", "has_rio", "has_bio", "has_bmem",
-    "has_lock"))
-def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
-              L_mem_g, nthr_g, warm_g, n_ops, dyn, key, stream_ids, *,
-              T_max, P, n_ssd, steps, unroll, substeps, use_pallas,
-              has_eps, has_rho, has_jitter, has_rio, has_bio, has_bmem,
-              has_lock):
+def _grid_body(kinds, durs, op_starts, op_ends, n_trace,
+               L_mem_g, nthr_g, warm_g, n_ops, dyn, key, stream_ids, *,
+               T_max, P, n_ssd, steps, unroll, substeps, use_pallas,
+               early_exit, n_cores,
+               has_eps, has_rho, has_jitter, has_rio, has_bio, has_bmem,
+               has_lock):
+    """The (unjitted) grid program; ``_run_grid`` jits it, the host-device
+    sharding path wraps it in ``shard_map`` over the cell axis first."""
     from repro.kernels import sched_step as sk
 
     has_io_clock = has_rio or has_bio
+    multicore = n_cores > 1
     f = jnp.float64
     i4 = jnp.int32
     G = L_mem_g.shape[0]
+    CT = n_cores * T_max    # total thread slots (core-major when C > 1)
 
     rho, L_dram = dyn[2], dyn[3]
 
@@ -288,16 +312,21 @@ def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
     # same reason: they must not depend on the batch's T_max padding.
     cell_keys = jax.vmap(jax.random.fold_in, (None, 0))(key, stream_ids)
     k_chunks = jax.vmap(lambda k: jax.random.fold_in(k, 1))(cell_keys)
-    tids = jnp.arange(T_max, dtype=i4)
-    active = tids[None, :] < nthr_g[:, None]                       # (G, T)
+    tids = jnp.arange(CT, dtype=i4)
+    t_local = tids % T_max                 # slot within the owning core
+    active = t_local[None, :] < nthr_g[:, None]                # (G, CT)
     u_cursor = jax.vmap(lambda k: jax.random.uniform(
         jax.random.fold_in(k, 0), (), dtype=f))(cell_keys)
     cursor0 = jnp.floor(u_cursor * n_trace).astype(i4)
-    opidx0 = (cursor0[:, None] + tids[None, :]) % n_trace
-    cursor_init = (cursor0 + nthr_g) % n_trace
+    # Active threads consume consecutive cursor slots in core-major tid
+    # order, like the loops' init (padding slots alias harmlessly: they
+    # never execute).
+    rank = (tids // T_max)[None, :] * nthr_g[:, None] + t_local[None, :]
+    opidx0 = (cursor0[:, None] + rank) % n_trace
+    cursor_init = (cursor0 + n_cores * nthr_g) % n_trace
     u_thread = jax.vmap(lambda k: jax.vmap(
         lambda t: jax.random.uniform(jax.random.fold_in(k, 2 + t), (2,),
-                                     dtype=f))(tids))(cell_keys)  # (G, T, 2)
+                                     dtype=f))(tids))(cell_keys)  # (G, CT, 2)
     pf0 = u_thread[:, :, 0] * lmem(u_thread[:, :, 1], L_mem_g[:, None])
 
     # Initial state, in the sched_step layout: active threads populate the
@@ -307,8 +336,9 @@ def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
     # sentinel / +inf.
     span0 = sk.pack_span(op_starts[opidx0].astype(f),
                          op_ends[opidx0].astype(f))
-    tids_gt = jnp.broadcast_to(tids[None, :], (G, T_max))
+    tids_gt = jnp.broadcast_to(tids[None, :], (G, CT))
     slots_p = jnp.arange(P, dtype=i4)[None, :]
+    pf_shape = (G, n_cores, P) if multicore else (G, P)
     state = (
         jnp.zeros((G, 6), f).at[:, 3].set(-1.0),
         jnp.stack(
@@ -318,11 +348,14 @@ def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
         jnp.where(active,
                   sk.tag_encode(tids_gt.astype(f) * sk.EPOCH, tids_gt),
                   sk.BIG),
-        jnp.full((G, T_max), jnp.inf, f),
+        jnp.full((G, CT), jnp.inf, f),
         jnp.stack([pf0, span0], axis=2),
-        sk.tag_encode(jnp.broadcast_to(slots_p.astype(f) * sk.EPOCH, (G, P)),
-                      jnp.broadcast_to(slots_p, (G, P))),
+        jnp.broadcast_to((slots_p.astype(f) * sk.EPOCH)
+                         .reshape((1,) * (len(pf_shape) - 1) + (P,)),
+                         pf_shape),
     )
+    if multicore:
+        state = state + (jnp.zeros((G, n_cores, 2), f),)
     if has_io_clock:
         state = state + (jnp.zeros((G, n_ssd), f), jnp.zeros((G, n_ssd), f))
 
@@ -330,7 +363,7 @@ def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
         n_u=n_u, n_ssd=n_ssd, has_eps=has_eps, has_rho=has_rho,
         has_jitter=has_jitter, has_rio=has_rio, has_bio=has_bio,
         has_bmem=has_bmem, has_lock=has_lock,
-        onehot_updates=use_pallas, eager_wmin=use_pallas)
+        onehot_updates=use_pallas, eager_wmin=use_pallas, n_cores=n_cores)
 
     if use_pallas:
         def block(s, ub):
@@ -354,8 +387,30 @@ def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
             return jax.lax.scan(block, s, ub)
         return jax.lax.scan(step, s, us, unroll=unroll)
 
-    state, _ = jax.lax.scan(
-        chunk, state, jnp.arange(steps // _RNG_CHUNK, dtype=i4))
+    n_chunks = steps // _RNG_CHUNK
+    if early_exit:
+        # Stop scanning once every cell in the call latched its measured
+        # ops: finished cells are inert (counters and t_start/t_end are
+        # latched, the state only idles on), so cutting the tail chunks
+        # cannot change any result -- it only stops paying for cells that
+        # are already done.  The chunk counter ck rides in the carry, so
+        # the uniform feed fold_in(k_chunks, ck) is identical to the
+        # monolithic scan's; XLA keeps the while carry in donated buffers.
+        def w_cond(carry):
+            ck, s = carry
+            return (ck < n_chunks) & ~jnp.all(s[1][:, 3] >= n_ops)
+
+        def w_body(carry):
+            ck, s = carry
+            s2, _ = chunk(s, ck)
+            return ck + jnp.int32(1), s2
+
+        ck_end, state = jax.lax.while_loop(
+            w_cond, w_body, (jnp.int32(0), state))
+    else:
+        state, _ = jax.lax.scan(
+            chunk, state, jnp.arange(n_chunks, dtype=i4))
+        ck_end = jnp.int32(n_chunks)
     cf, ci = state[0], state[1]
     elapsed = jnp.maximum(cf[:, 4] - cf[:, 3], 1e-12)
     return dict(
@@ -364,7 +419,48 @@ def _run_grid(kinds, durs, op_starts, op_ends, n_trace,
         mem_stall_total=cf[:, 5],
         mem_accesses=ci[:, 4],
         counted=ci[:, 3],
+        # Per-cell so the host-sharded path can report each shard's own
+        # early-exit point (shards stop independently, no collectives).
+        steps_run=jnp.broadcast_to(ck_end * _RNG_CHUNK, (G,)),
     )
+
+
+_STATIC_GRID_ARGS = (
+    "T_max", "P", "n_ssd", "steps", "unroll", "substeps", "use_pallas",
+    "early_exit", "n_cores",
+    "has_eps", "has_rho", "has_jitter", "has_rio", "has_bio", "has_bmem",
+    "has_lock")
+
+_run_grid = partial(jax.jit, static_argnames=_STATIC_GRID_ARGS)(_grid_body)
+
+
+@lru_cache(maxsize=64)
+def _run_grid_sharded(n_dev: int, **static):
+    """Jitted ``shard_map`` wrapper of :func:`_grid_body` splitting the cell
+    axis over ``n_dev`` host CPU devices (the caller pads G to a multiple).
+    Each shard runs -- and early-exits -- independently: there are no
+    collectives in the grid program."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    devs = jax.devices("cpu")[:n_dev]
+    if hasattr(jax, "make_mesh"):
+        mesh = jax.make_mesh((n_dev,), ("cells",), devices=devs)
+    else:  # older jax: build the mesh directly
+        from jax.sharding import Mesh
+        mesh = Mesh(np.asarray(devs), ("cells",))
+    cells, repl = P("cells"), P()
+    fn = shard_map(
+        partial(_grid_body, **static), mesh,
+        in_specs=(repl, repl, repl, repl, repl,      # trace columns, n_trace
+                  cells, cells, cells,               # L_mem_g, nthr_g, warm_g
+                  repl, repl, repl, cells),          # n_ops, dyn, key, streams
+        out_specs=cells,
+        # the early-exit while_loop has no replication rule; every output
+        # is cell-sharded anyway, so the rep check buys nothing here
+        check_rep=False,
+    )
+    return jax.jit(fn)
 
 
 def _thread_buckets(candidates: Sequence[int]) -> list[list[int]]:
@@ -380,6 +476,36 @@ def _thread_buckets(candidates: Sequence[int]) -> list[list[int]]:
     return [ix for _, ix in sorted(groups.items())]
 
 
+def _cohorts(source: CompiledTrace, candidates: Sequence[int], n_ops: int,
+             warmup_ops: int | None, n_cores: int,
+             bucket_threads: bool) -> list[tuple[list[int], int, int]]:
+    """Partition candidate columns into scan cohorts: ``(cols, T_max,
+    steps)`` groups sharing a thread bucket *and* a step bound.
+
+    The thread buckets are :func:`_thread_buckets`'s power-of-two ceilings;
+    within a bucket, candidates whose per-cell worst-case bound lands in a
+    different ``_STEP_BUCKET`` split into their own cohort, so a cohort's
+    early exit is never held open by a cell with a structurally larger
+    bound (uneven warmups are the common case: warmup defaults to
+    ``2 * threads * cores``).  Per-cell RNG purity makes any partition
+    result-invariant; ``bucket_threads=False`` collapses everything into
+    the single monolithic scan (one ``T_max``, one global bound)."""
+    if not bucket_threads:
+        T_max = max(candidates)
+        warm = (warmup_ops if warmup_ops is not None
+                else 2 * T_max * n_cores)
+        steps = _steps_bound(source, n_ops, warm, T_max * n_cores)
+        return [(list(range(len(candidates))), T_max, steps)]
+    groups: dict[tuple[int, int], list[int]] = {}
+    for j, c in enumerate(candidates):
+        b = 1 if c <= 1 else 1 << (c - 1).bit_length()
+        warm = warmup_ops if warmup_ops is not None else 2 * c * n_cores
+        steps = _steps_bound(source, n_ops, warm, c * n_cores)
+        groups.setdefault((b, steps), []).append(j)
+    return [(ix, max(candidates[j] for j in ix), steps)
+            for (_, steps), ix in sorted(groups.items())]
+
+
 def sweep_grid(
     cfg: SimConfig,
     trace: CompiledTrace | TraceArrays,
@@ -392,25 +518,36 @@ def sweep_grid(
     unroll: int = 2,
     substeps: int = 8,
     bucket_threads: bool = True,
+    early_exit: bool = True,
+    host_devices: int | None = None,
 ) -> GridResult:
     """Run the full ``latencies x thread_candidates`` grid in one compiled
-    call per thread bucket; see the module docstring for semantics and
-    exactness.
+    call per cohort; see the module docstring for semantics and exactness.
 
     ``cfg`` supplies everything except ``L_mem``/``n_threads`` (the grid
-    axes).  Scalar latencies and single-core configs only; ``warmup_ops``
-    defaults per cell to ``2 * n_threads``, like the loop backends.
+    axes); ``n_threads`` is *per core*, and ``cfg.n_cores > 1`` replays
+    the multi-core scheduler (per-core rings + prefetch windows, shared
+    T_lock / SSD clocks) as long as ``n_cores * T_max`` fits the tag bits.
+    Scalar latencies only; ``warmup_ops`` defaults per cell to
+    ``2 * n_threads * n_cores``, like the loop backends.
 
     ``use_pallas`` routes the scan through the fused whole-step kernel
     (``substeps`` inner steps per kernel invocation); the default jnp scan
     path uses ``unroll`` to amortize dispatch instead.
-    ``bucket_threads=False`` forces the single-call layout (all candidates
-    padded to one ``T_max``).
+    ``bucket_threads=False`` forces the single monolithic layout (all
+    candidates padded to one ``T_max``, one global step bound);
+    ``early_exit=False`` additionally scans every cohort to its full
+    bound -- together they reproduce the pre-cohort behavior exactly
+    (per-cell RNG purity makes all four combinations bit-identical).
+
+    ``host_devices=N > 1`` shard_maps each cohort's cell axis over N XLA
+    host CPU devices (export ``REPRO_JAX_HOST_DEVICES=N`` -- or set
+    ``--xla_force_host_platform_device_count`` -- *before* jax
+    initializes); shards early-exit independently.  Incompatible with
+    ``use_pallas`` (the interpreted kernel cannot run under shard_map).
     """
-    if cfg.n_cores != 1:
-        raise ValueError(
-            "the jax backend replays single-core configs only; use "
-            "backend='loop' for n_cores > 1")
+    if cfg.n_cores < 1:
+        raise ValueError(f"n_cores must be >= 1, got {cfg.n_cores}")
     if cfg.collect_load_hist:
         raise ValueError(
             "per-load stall histograms are not available from the jax "
@@ -433,7 +570,7 @@ def sweep_grid(
             f"substeps must divide the RNG chunk ({_RNG_CHUNK}): "
             f"{substeps}")
 
-    from repro.kernels.sched_step import SPAN_SHIFT
+    from repro.kernels.sched_step import SPAN_SHIFT, TAG_BITS
 
     source = trace if isinstance(trace, CompiledTrace) else trace.to_trace()
     ta = trace if isinstance(trace, TraceArrays) else lower_trace(trace)
@@ -442,6 +579,27 @@ def sweep_grid(
             f"trace has {int(ta.op_ends[-1])} suboperations; the fused "
             f"step's span packing supports < 2**{SPAN_SHIFT}")
     n_lat, n_cand = len(latencies), len(candidates)
+    if cfg.n_cores * max(candidates) > (1 << TAG_BITS):
+        raise ValueError(
+            f"n_cores * max threads = {cfg.n_cores * max(candidates)} "
+            f"exceeds the {1 << TAG_BITS} thread slots the tag encoding "
+            f"supports (TAG_BITS={TAG_BITS}); use backend='loop' for "
+            "wider machines")
+    n_dev = 1 if host_devices is None else int(host_devices)
+    if n_dev < 1:
+        raise ValueError(f"host_devices must be >= 1, got {host_devices}")
+    if n_dev > 1:
+        if use_pallas:
+            raise ValueError(
+                "host_devices > 1 cannot run the interpreted Pallas "
+                "kernel under shard_map; drop use_pallas or the sharding")
+        avail = len(jax.devices("cpu"))
+        if n_dev > avail:
+            raise ValueError(
+                f"host_devices={n_dev} but jax sees {avail} host CPU "
+                "device(s); export REPRO_JAX_HOST_DEVICES (or set "
+                "--xla_force_host_platform_device_count) before jax "
+                "initializes")
 
     dyn = (
         cfg.T_sw, cfg.eps, cfg.rho, cfg.L_dram, cfg.L_io, cfg.L_io_jitter,
@@ -451,8 +609,8 @@ def sweep_grid(
         cfg.A_mem / cfg.B_mem if cfg.B_mem > 0.0 else 0.0,
         cfg.T_lock,
     )
-    buckets = (_thread_buckets(candidates) if bucket_threads
-               else [list(range(n_cand))])
+    cohorts = _cohorts(source, candidates, n_ops, warmup_ops, cfg.n_cores,
+                       bucket_threads)
 
     shape = (n_lat, n_cand)
     thr = np.empty(shape)
@@ -460,29 +618,47 @@ def sweep_grid(
     stall = np.empty(shape)
     macc = np.empty(shape, dtype=np.int64)
     max_steps = 0
+    steps_bound_cells = 0
+    steps_run_cells = 0
     with enable_x64():
-        for cols in buckets:
+        for cols, T_max, steps in cohorts:
             cand_b = [candidates[j] for j in cols]
-            T_max = max(cand_b)
             nc = len(cand_b)
+            G = n_lat * nc
             L_mem_g = np.repeat(np.asarray(latencies, dtype=np.float64), nc)
             nthr_g = np.tile(np.asarray(cand_b, dtype=np.int32), n_lat)
             warm_g = (np.full_like(nthr_g, warmup_ops)
-                      if warmup_ops is not None else 2 * nthr_g)
-            steps = _steps_bound(source, n_ops, int(warm_g.max()), T_max)
+                      if warmup_ops is not None
+                      else 2 * nthr_g * cfg.n_cores)
             max_steps = max(max_steps, steps)
 
             # Each cell's RNG stream is keyed by its (L_mem, n_threads)
             # VALUES, so a cell's result never depends on which other
-            # cells -- or buckets -- share the call (cache purity; see the
-            # per-cell RNG comment in _run_grid).
+            # cells -- or cohorts -- share the call (cache purity; see the
+            # per-cell RNG comment in _grid_body).
             stream_ids = np.array(
                 [zlib.crc32(struct.pack("<dq", L, n))
                  for L in np.asarray(latencies, dtype=np.float64)
                  for n in cand_b],
                 dtype=np.uint32,
             )
-            out = _run_grid(
+            pad = (-G) % n_dev
+            if pad:
+                # Pad the cell axis to the device count by repeating the
+                # last cell: same stream id -> identical results, sliced
+                # off below.
+                L_mem_g, nthr_g, warm_g, stream_ids = (
+                    np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+                    for a in (L_mem_g, nthr_g, warm_g, stream_ids))
+            static = dict(
+                T_max=T_max, P=cfg.P, n_ssd=cfg.n_ssd, steps=steps,
+                unroll=unroll, substeps=substeps if use_pallas else 0,
+                use_pallas=use_pallas, early_exit=early_exit,
+                n_cores=cfg.n_cores, **_make_flags(cfg),
+            )
+            run = (_run_grid_sharded(n_dev, **static) if n_dev > 1
+                   else partial(_run_grid, **static))
+            out = run(
                 ta.kinds, ta.durs, ta.op_starts, ta.op_ends,
                 jnp.int32(ta.n_ops),
                 jnp.asarray(L_mem_g), jnp.asarray(nthr_g),
@@ -491,17 +667,16 @@ def sweep_grid(
                 tuple(jnp.float64(d) for d in dyn),
                 jax.random.PRNGKey(cfg.seed),
                 jnp.asarray(stream_ids),
-                T_max=T_max, P=cfg.P, n_ssd=cfg.n_ssd, steps=steps,
-                unroll=unroll, substeps=substeps if use_pallas else 0,
-                use_pallas=use_pallas, **_make_flags(cfg),
             )
-            out = {k: np.asarray(v) for k, v in out.items()}
+            out = {k: np.asarray(v)[:G] for k, v in out.items()}
             if not np.all(out["counted"] >= n_ops):
                 short = int(out["counted"].min())
                 raise RuntimeError(
                     f"jax replay under-ran its step bound ({steps} steps, "
                     f"worst cell counted {short}/{n_ops} ops) -- this is "
                     "a bug in _steps_bound")
+            steps_bound_cells += steps * G
+            steps_run_cells += int(out["steps_run"].sum())
             bshape = (n_lat, nc)
             thr[:, cols] = out["throughput"].reshape(bshape)
             tim[:, cols] = out["time"].reshape(bshape)
@@ -514,4 +689,6 @@ def sweep_grid(
         mem_accesses=macc,
         ops=n_ops,
         steps=max_steps,
+        cell_steps_bound=steps_bound_cells,
+        cell_steps_run=steps_run_cells,
     )

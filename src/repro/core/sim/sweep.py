@@ -27,6 +27,7 @@ import numbers
 import os
 import re
 import sys
+import time
 from dataclasses import dataclass, replace
 from typing import Callable, Iterable, Sequence
 
@@ -34,7 +35,8 @@ from ..trace_ir import CompiledTrace, Op
 from .config import DEFAULT_THREAD_CANDIDATES, SimConfig, SimResult
 from .engine_loop import simulate, simulate_compiled
 
-__all__ = ["SweepPoint", "sweep_latency", "clear_sweep_cache", "BACKENDS"]
+__all__ = ["SweepPoint", "sweep_latency", "clear_sweep_cache",
+           "prune_sweep_cache", "BACKENDS"]
 
 #: Valid ``backend=`` values: the interpreter loops (generic/compiled), or
 #: the vectorized jax grid (:mod:`.replay_jax`).
@@ -243,13 +245,91 @@ def clear_sweep_cache(cache_dir: str | os.PathLike) -> int:
     return removed
 
 
+def prune_sweep_cache(
+    cache_dir: str | os.PathLike,
+    max_bytes: int | None = None,
+    max_age_days: float | None = None,
+) -> int:
+    """Evict memoized sweep cells, least-recently-used first.
+
+    ``max_age_days`` removes every cell whose mtime is older than that
+    many days; ``max_bytes`` then removes the oldest remaining cells until
+    the directory's cell bytes fit the budget.  ``_cache_load`` touches a
+    cell's mtime on every hit, so mtime order is LRU order.  Stale
+    in-flight temp files (``*.json.tmp.<pid>``) older than a day are
+    swept unconditionally.  Only cell-shaped names are touched (see
+    :func:`clear_sweep_cache`); returns the number of cells removed.
+    Used by ``benchmarks.run --sweep-cache-prune``."""
+    if max_bytes is not None and max_bytes < 0:
+        raise ValueError(f"max_bytes must be >= 0, got {max_bytes}")
+    if max_age_days is not None and max_age_days < 0:
+        raise ValueError(f"max_age_days must be >= 0, got {max_age_days}")
+    try:
+        names = os.listdir(cache_dir)
+    except OSError:
+        return 0
+    now = time.time()
+    cells: list[tuple[float, int, str]] = []   # (mtime, size, path)
+    for name in names:
+        if not _CELL_FILE.match(name):
+            continue
+        path = os.path.join(str(cache_dir), name)
+        try:
+            st = os.stat(path)
+        except OSError:
+            continue
+        if not name.endswith(".json"):         # orphaned temp file
+            if now - st.st_mtime > 86400.0:
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+            continue
+        cells.append((st.st_mtime, st.st_size, path))
+    cells.sort()                               # oldest (least recent) first
+
+    removed = 0
+
+    def evict(entry: tuple[float, int, str]) -> bool:
+        nonlocal removed
+        try:
+            os.remove(entry[2])
+        except OSError:
+            return False
+        removed += 1
+        return True
+
+    if max_age_days is not None:
+        cutoff = now - max_age_days * 86400.0
+        keep = []
+        for entry in cells:
+            if entry[0] < cutoff:
+                evict(entry)
+            else:
+                keep.append(entry)
+        cells = keep
+    if max_bytes is not None:
+        total = sum(size for _, size, _ in cells)
+        for entry in cells:
+            if total <= max_bytes:
+                break
+            if evict(entry):
+                total -= entry[1]
+    return removed
+
+
 def _cache_load(path: str) -> SimResult | None:
     try:
         with open(path) as f:
             d = json.load(f)
-        return SimResult(**{k: d[k] for k in _CACHED_FIELDS})
+        r = SimResult(**{k: d[k] for k in _CACHED_FIELDS})
     except (OSError, ValueError, KeyError, TypeError):
         return None
+    try:
+        os.utime(path)   # mtime is the LRU clock for prune_sweep_cache
+    except OSError:
+        pass
+    return r
 
 
 def _cache_store(path: str, r: SimResult) -> None:
@@ -291,6 +371,7 @@ def sweep_latency(
     use_pallas: bool = False,
     unroll: int | None = None,
     substeps: int | None = None,
+    host_devices: int | None = None,
 ) -> list[SweepPoint]:
     """Throughput vs. memory latency with per-point thread optimization.
 
@@ -351,17 +432,20 @@ def sweep_latency(
         than bit-identically (see ``docs/SIMULATION.md``), mixture-latency
         points still run through the loop per cell, and ``processes`` is
         ignored for the jax cells.  Requires a trace source (not a
-        callable), a single-core config, and no latency/histogram
-        collection; incompatible with ``adaptive=True``.  Cached cells are
-        keyed per backend, so the two never answer for each other.
-    use_pallas, unroll, substeps
+        callable) and no latency/histogram collection; incompatible with
+        ``adaptive=True``.  Cached cells are keyed per backend, so the two
+        never answer for each other.
+    use_pallas, unroll, substeps, host_devices
         Jax-backend execution tuning, forwarded to
         :func:`~repro.core.sim.replay_jax.sweep_grid`: ``use_pallas``
         routes the scan through the fused whole-step kernel (``substeps``
         inner steps per kernel invocation), ``unroll`` amortizes dispatch
-        on the jnp scan path.  ``None`` keeps ``sweep_grid``'s default.
-        Strategy knobs only -- cell values (and hence cache keys) do not
-        depend on them; ignored by ``backend="loop"``.
+        on the jnp scan path, ``host_devices`` shard_maps the cell axis
+        over that many host CPU devices (requires the process to have been
+        started with ``--xla_force_host_platform_device_count``).  ``None``
+        keeps ``sweep_grid``'s default.  Strategy knobs only -- cell
+        values (and hence cache keys) do not depend on them; ignored by
+        ``backend="loop"``.
 
     Returns one :class:`SweepPoint` per latency, in input order.
     """
@@ -386,10 +470,6 @@ def sweep_latency(
             raise ValueError(
                 "backend='jax' replays compiled traces; pass a "
                 "CompiledTrace / TraceResult / list[Op], not a callable")
-        if cfg.n_cores != 1:
-            raise ValueError(
-                "backend='jax' replays single-core configs only; use "
-                "backend='loop' for n_cores > 1")
 
     use_cache = (cache_dir is not None and trace is not None
                  and not cfg.collect_load_hist and not collect_latency)
@@ -434,6 +514,8 @@ def sweep_latency(
             jax_opts["unroll"] = unroll
         if substeps is not None:
             jax_opts["substeps"] = substeps
+        if host_devices is not None:
+            jax_opts["host_devices"] = host_devices
         _run_jax_cells(cfg, trace, latencies, candidates, n_ops,
                        warmup_ops, results, todo, jax_opts)
         if use_cache:

@@ -55,19 +55,30 @@ State layout (the kernel ref contract)
                               at which the thread last started a
                               suboperation (tag-encoded with the tid);
                               ``BIG`` when parked or inactive
-  ``wake``      (G, T) f64    parked threads' IO completion time
-                              (tag-encoded); ``+inf`` when ready or
-                              inactive.  Threads whose IO completed are
-                              derived into the ring at pop time (see
-                              ``ring_keys``), never written back
+  ``wake``      (G, T) f64    parked threads' IO completion time, stored
+                              *exact* (the idle-skip reads it back as a
+                              time; ``ring_keys`` tags it on the fly);
+                              ``+inf`` when ready or inactive.  Threads
+                              whose IO completed are derived into the
+                              ring at pop time, never written back
   ``pft``       (G, T, 2) f64 0 outstanding prefetch completion time,
                               1 trace span ``end * 2**SPAN_SHIFT + i``
                               (both integers < 2**SPAN_SHIFT: exact)
   ``pf_slots``  (G, P) f64    P-deep in-flight prefetch window completion
-                              times, tag-encoded with the slot index
+                              times, stored exact (the all-busy delay
+                              reads the minimum back as a time; the slot
+                              pick tags on the fly)
   ``io_tok``    (G, S) f64    per-device IOPS token clocks (clock configs)
   ``io_bw``     (G, S) f64    per-device bandwidth token clocks
   ============  ============  =================================================
+
+With ``n_cores = C > 1`` (see :func:`make_substep`) the thread planes hold
+``T = C * T_per_core`` core-major slots tagged by *global* tid,
+``pf_slots`` becomes ``(G, C, P)``, and one extra plane ``cores``
+``(G, C, 2)`` (0 local clock, 1 prefetch-bw clock) sits between
+``pf_slots`` and the IO clocks; ``cf[:, 0]``/``cf[:, 1]`` then carry the
+global drain horizon (running max of pop times, mirroring the loop's
+shared parked heap -- see the in-step comment) / nothing.
 
 The K-substep batching contract: one :func:`fused_steps` invocation consumes
 a ``(K, n_u, G)`` block of pre-drawn uniforms and advances the state by
@@ -150,7 +161,7 @@ def unpack_span(span):
 
 def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
                  has_bio, has_bmem, has_lock, onehot_updates=False,
-                 eager_wmin=False):
+                 eager_wmin=False, n_cores=1):
     """Build the scheduler substep body, specialized on the static config.
 
     The returned ``substep(state, u, kd, se, n_trace, L_mem_g, warm_g,
@@ -166,8 +177,23 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
     idle-skip re-derivation instead of branching on whether any cell is
     starved (kernels prefer straight-line code; the resulting values are
     identical either way).
+
+    ``n_cores > 1`` adds a core axis: thread planes become ``(G, C*T)``
+    core-major with *global* tids in the tag bits (so ``C*T`` must stay
+    <= 2**TAG_BITS), the prefetch window and its bandwidth clock become
+    per-core (``pf_slots`` is ``(G, C, P)``, and a new ``cores`` plane
+    ``(G, C, 2)`` carries each core's local clock and prefetch-bw clock),
+    while the trace cursor, op counters, T_lock clock, and SSD token
+    clocks stay shared -- exactly the generic loop's sharing.  Each step
+    first picks the core with the earliest next-event time (its local
+    clock if it has a runnable thread, else its earliest parked wake --
+    the loop's core heap + idle-skip collapsed into one tagged min; ties
+    break to the lower core id like ``heapq``) and then runs the
+    single-core step body on that core's thread segment.  The
+    ``n_cores == 1`` path is byte-for-byte the pre-existing substep.
     """
     has_io_clock = has_rio or has_bio
+    multicore = n_cores > 1
     f = jnp.float64
     i4 = jnp.int32
 
@@ -199,7 +225,12 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
     def substep(s, u, kd, se, n_trace, L_mem_g, warm_g, n_ops, dyn):
         (T_sw, eps, rho, L_dram, L_io, jitter, inv_R, cost_bw_io, L_switch,
          cost_bmem, T_lock) = dyn
-        if has_io_clock:
+        if multicore:
+            if has_io_clock:
+                cf, ci, stamp, wake, pft, pf_slots, cores, io_tok, io_bw = s
+            else:
+                cf, ci, stamp, wake, pft, pf_slots, cores = s
+        elif has_io_clock:
             cf, ci, stamp, wake, pft, pf_slots, io_tok, io_bw = s
         else:
             cf, ci, stamp, wake, pft, pf_slots = s
@@ -214,41 +245,102 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
 
         counted0 = ci[:, 3]
         reached = counted0 >= n_ops    # cell already took its last op
-        now = cf[:, 0]
 
-        # -- pop the ring head: one tag-encoded min replaces argmin ---------
-        # Ring stamps are *entry tickets*: a thread re-enters the ring
-        # keyed by its pop time, and a parked thread whose IO completed
-        # joins at its wake time -- so the FIFO order is just time
-        # order, and parked-but-complete threads can be *derived* into
-        # the ring at pop time instead of being written back.  The key
-        # plane below stays a temporary the backend fuses into the min
-        # reduction; the materialized wake drain it replaces (two
-        # carried full-plane writes per step) was the single largest
-        # cost of the old step.
-        def ring_keys(now_v):
-            return jnp.where(wake <= now_v[:, None], wake, stamp)
+        if multicore:
+            # -- core selection: the loop's core heap as one tagged min -----
+            # Heap entries are the cores' clocks at their last *yield*, NOT
+            # their next-event times: the loop pops the core whose last run
+            # ended earliest, and a core popped with an empty ring jumps
+            # straight to its earliest parked wake and executes there -- it
+            # never re-enters the heap re-keyed.  So selection compares the
+            # yield clocks, and the idle-skip applies only to the *selected*
+            # core (the single-core path per core segment).  The scan is an
+            # exact unrolled min (C is small and static): cores running the
+            # same ops sit within a few ulps of each other, well inside the
+            # 2**TAG_BITS quantum, so a tag-encoded min would collapse
+            # distinct clocks into ties and pick the wrong core.  Strict
+            # ``<`` breaks ties to the lower cid, exactly ``heapq``'s
+            # (t, cid) entries.
+            C, Tpc = n_cores, T // n_cores
+            core_now = cores[:, :, 0]                        # (G, C)
+            wake3 = wake.reshape(G, C, Tpc)
+            stamp3 = stamp.reshape(G, C, Tpc)
+            cstar = jnp.zeros((G,), i4)
+            now = core_now[:, 0]
+            for c in range(1, C):
+                cand = core_now[:, c]
+                earlier = cand < now
+                cstar = jnp.where(earlier, c, cstar)
+                now = jnp.where(earlier, cand, now)
+            # The selected core's ring head / idle-skip, exactly the
+            # single-core derivation over its thread segment; tags are
+            # global tids, so ``tid`` indexes the flat planes directly.
+            wake_c = sel_thread(wake3, cstar)                # (G, Tpc)
+            stamp_c = sel_thread(stamp3, cstar)
+            gtid_c = (cstar[:, None] * Tpc
+                      + jax.lax.broadcasted_iota(i4, (G, Tpc), 1))
 
-        head = jnp.min(ring_keys(now), axis=1)
+            def ring_keys_mc(now_v):
+                wkey = tag_encode(
+                    jnp.maximum(jnp.minimum(wake_c, BIG), T * EPOCH), gtid_c)
+                return jnp.where(wake_c <= now_v[:, None], wkey, stamp_c)
 
-        # -- idle-skip: nothing ready, nothing eligible -> jump to the ------
-        # earliest wake-up and re-derive the keys.  Starvation is rare for
-        # healthy thread counts, so the jnp path branches around the second
-        # pass at run time; the kernel path runs it straight-line.  The
-        # values agree either way: a cell that did not starve re-derives
-        # identical keys from an unchanged ``now``.
-        starved = head >= BIG
+            head = jnp.min(ring_keys_mc(now), axis=1)
+            starved = head >= BIG
 
-        def skip(now_v):
-            w_min = jnp.min(wake, axis=1)
-            now2 = jnp.where(starved, jnp.maximum(now_v, w_min), now_v)
-            return now2, jnp.min(ring_keys(now2), axis=1)
+            def skip_mc(now_v):
+                w_min = jnp.min(wake_c, axis=1)
+                now2 = jnp.where(starved, jnp.maximum(now_v, w_min), now_v)
+                return now2, jnp.min(ring_keys_mc(now2), axis=1)
 
-        if eager_wmin:
-            now, head = skip(now)
+            if eager_wmin:
+                now, head = skip_mc(now)
+            else:
+                now, head = jax.lax.cond(
+                    jnp.any(starved), lambda: skip_mc(now),
+                    lambda: (now, head))
+            pop_now = now
         else:
-            now, head = jax.lax.cond(
-                jnp.any(starved), lambda: skip(now), lambda: (now, head))
+            now = cf[:, 0]
+
+            # -- pop the ring head: one tag-encoded min replaces argmin -----
+            # Ring stamps are *entry tickets*: a thread re-enters the ring
+            # keyed by its pop time, and a parked thread whose IO completed
+            # joins at its wake time -- so the FIFO order is just time
+            # order, and parked-but-complete threads can be *derived* into
+            # the ring at pop time instead of being written back.  The key
+            # plane below stays a temporary the backend fuses into the min
+            # reduction; the materialized wake drain it replaces (two
+            # carried full-plane writes per step) was the single largest
+            # cost of the old step.
+            tids_row = jax.lax.broadcasted_iota(i4, (G, T), 1)
+
+            def ring_keys(now_v):
+                wkey = tag_encode(
+                    jnp.maximum(jnp.minimum(wake, BIG), T * EPOCH), tids_row)
+                return jnp.where(wake <= now_v[:, None], wkey, stamp)
+
+            head = jnp.min(ring_keys(now), axis=1)
+
+            # -- idle-skip: nothing ready, nothing eligible -> jump to the --
+            # earliest wake-up and re-derive the keys.  Starvation is rare
+            # for healthy thread counts, so the jnp path branches around the
+            # second pass at run time; the kernel path runs it
+            # straight-line.  The values agree either way: a cell that did
+            # not starve re-derives identical keys from an unchanged
+            # ``now``.
+            starved = head >= BIG
+
+            def skip(now_v):
+                w_min = jnp.min(wake, axis=1)
+                now2 = jnp.where(starved, jnp.maximum(now_v, w_min), now_v)
+                return now2, jnp.min(ring_keys(now2), axis=1)
+
+            if eager_wmin:
+                now, head = skip(now)
+            else:
+                now, head = jax.lax.cond(
+                    jnp.any(starved), lambda: skip(now), lambda: (now, head))
         tid = tag_tid(head)
         # The popped thread's next ring ticket.  The scalar loop drains
         # wake-ups only at iteration start, *after* the previous runner
@@ -256,8 +348,13 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
         # execution window queues behind it.  Keying the re-entrant
         # runner by its pop time (not its yield time) reproduces that
         # order exactly: wakes <= pop time drained at or before this
-        # iteration and sort ahead; later wakes sort behind.
-        ticket = tag_encode(now, tid)
+        # iteration and sort ahead; later wakes sort behind.  The key is
+        # clamped to T*EPOCH -- above every init stamp, still a normal
+        # float -- because a pop at time zero (every core's first pop)
+        # would otherwise store a denormal ticket that FTZ/DAZ runtimes
+        # read back as 0.0 with tag 0, re-running the popped thread ahead
+        # of the untouched ring instead of appending it at the tail.
+        ticket = tag_encode(jnp.maximum(now, T * EPOCH), tid)
 
         pft_r = sel_thread(pft, tid)                 # (G, 2)
         pf_tid0 = pft_r[:, 0]
@@ -337,38 +434,97 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
         # All P slots in flight <=> the window minimum is still in the
         # future, so the all-busy delay is just max(now, min slot); the
         # minimum slot is also the replacement target either way.
-        slot_enc = jnp.min(pf_slots, axis=1)
-        slot = tag_tid(slot_enc)
-        slot_min = tag_value(slot_enc)
+        if multicore:
+            # The selected core's private window + bandwidth clock.
+            slots_row = sel_thread(pf_slots, cstar)          # (G, P)
+            pf_bw = sel_thread(cores, cstar)[:, 1]
+        else:
+            slots_row = pf_slots
+            pf_bw = cf[:, 1]
+        # Slots store *exact* completion times; the tagged key exists only
+        # inside the min reduction, so the all-busy delay below is computed
+        # from the true float (tag-flooring it drifts ~256 ulps per issue,
+        # which compounds over long runs).  The EPOCH clamp keeps the
+        # time-zero init keys normal under FTZ/DAZ.
+        slot_iota = jax.lax.broadcasted_iota(i4, slots_row.shape, 1)
+        slot = tag_tid(jnp.min(
+            tag_encode(jnp.maximum(slots_row, EPOCH), slot_iota), axis=1))
+        slot_min = sel_thread(slots_row, slot)
         pstart = jnp.maximum(now, slot_min)
-        pf_bw = cf[:, 1]
         if has_bmem:
             pstart = jnp.maximum(pstart, pf_bw)
             pf_bw = jnp.where(issue, pstart + cost_bmem, pf_bw)
         u_pf = u[next(un)] if has_rho else None
         comp = pstart + lmem(u_pf, L_mem_g)
-        pf_slots = upd_thread(
-            pf_slots, slot,
-            jnp.where(issue, tag_encode(comp, slot), slot_enc))
+        slots_row = upd_thread(
+            slots_row, slot,
+            jnp.where(issue, comp, slot_min))
+        pf_slots = (upd_thread(pf_slots, cstar, slots_row) if multicore
+                    else slots_row)
         pf_tid = jnp.where(issue, comp, pf_tid0)
 
         # -- yield: context switch, park or re-enter the ready ring ---------
         now = now + T_sw
         stamp = upd_thread(stamp, tid, jnp.where(park, BIG, ticket))
+        # Wake times are stored exact (no tag): the starved idle-skip and
+        # the eligibility compare read them back as *times*, and a tagged
+        # store would perturb those reads by up to 2**TAG_BITS ulps per
+        # park.  ``ring_keys`` re-tags on the fly for the pop ordering.
         wake = upd_thread(wake, tid,
-                          jnp.where(park,
-                                    tag_encode(jnp.maximum(park_until, now),
-                                               tid),
+                          jnp.where(park, jnp.maximum(park_until, now),
                                     jnp.inf))
         pft = upd_thread(pft, tid, jnp.stack([pf_tid, span_next], axis=1))
 
         crossed = (counted >= n_ops) & ~reached
-        t_end = jnp.where(crossed, now, cf[:, 4])
+        if multicore:
+            cores = upd_thread(cores, cstar,
+                               jnp.stack([now, pf_bw], axis=1))
+            # -- global drain horizon: the loop's cross-core wake-ups -------
+            # The scalar loop drains the *shared* parked heap against the
+            # global pop horizon, so when one core's clock jumps ahead
+            # (e.g. a starved idle-skip), parked threads of *lagging* cores
+            # enter their rings early -- and run below their own core's
+            # clock, before their IO completion time.  ``cf[:, 0]`` carries
+            # that horizon H (the running max of pop times); threads whose
+            # wake fell at or below H while still above their core's clock
+            # are materialized into the stamp plane here, ticketed at their
+            # core's current clock (the ring-tail position the loop's
+            # append gives them).  Threads whose wake is at or below their
+            # own clock stay derived (key = wake) as in the single-core
+            # path.
+            H = jnp.maximum(cf[:, 0], pop_now)
+            clock_t = jnp.broadcast_to(
+                cores[:, :, 0][:, :, None], (G, C, Tpc)).reshape(G, T)
+            tids_all = jax.lax.broadcasted_iota(i4, (G, T), 1)
+            early = (wake <= H[:, None]) & (wake > clock_t)
+            # Ticket one tag-grid step *below* the core clock: the loop
+            # appends the drained thread before the core's next pop, whose
+            # runner re-enters ticketed at that same clock value -- the
+            # bias keeps the drained thread strictly ahead of it.  Real
+            # pops sit >= T_sw apart, far more than one grid step, so the
+            # bias cannot cross an earlier ticket.
+            cbits = jax.lax.bitcast_convert_type(
+                jnp.maximum(clock_t, 2.0 * T * EPOCH), jnp.uint64)
+            tail_key = jax.lax.bitcast_convert_type(
+                cbits - jnp.uint64(1 << TAG_BITS), jnp.float64)
+            stamp = jnp.where(early, tag_encode(tail_key, tids_all), stamp)
+            wake = jnp.where(early, jnp.inf, wake)
+            # The loop reports elapsed time against the *latest* core clock
+            # at exit (``max(c.now for c in cores)``).
+            t_end = jnp.where(crossed, jnp.max(cores[:, :, 0], axis=1),
+                              cf[:, 4])
+            pf_bw = cf[:, 1]   # cf slot 1 is unused with a core axis
+            now = H            # cf slot 0 carries the drain horizon
+        else:
+            t_end = jnp.where(crossed, now, cf[:, 4])
         cf = jnp.stack([now, pf_bw, lock_next, t_start, t_end, mem_stall],
                        axis=1)
         ci = jnp.stack([cursor, io_rr, done, counted, mem_acc, measuring],
                        axis=1)
-        return (cf, ci, stamp, wake, pft, pf_slots) + io_out
+        out = (cf, ci, stamp, wake, pft, pf_slots)
+        if multicore:
+            out = out + (cores,)
+        return out + io_out
 
     return substep
 

@@ -128,6 +128,33 @@ class TestScenario:
         assert one.L_switch == 0.0
         assert two.L_switch == pytest.approx(0.3 * US)
 
+    def test_host_spec_round_trips_and_reaches_sim_config(self):
+        """n_cores / T_lock_us are part of the device spec: they survive
+        the JSON round trip and land in SimConfig (T_lock in seconds)."""
+        s = Scenario(engine="lsm", n_cores=4, T_lock_us=0.1)
+        s2 = Scenario.from_json(s.to_json())
+        assert s2 == s and s2.n_cores == 4 and s2.T_lock_us == 0.1
+        cfg = s2.sim_config()
+        assert cfg.n_cores == 4
+        assert cfg.T_lock == pytest.approx(0.1 * US)
+        # defaults stay single-core / lock-free
+        base = Scenario(engine="lsm").sim_config()
+        assert base.n_cores == 1 and base.T_lock == 0.0
+
+    def test_host_spec_validation(self):
+        with pytest.raises(ValueError, match="n_cores"):
+            Scenario(engine="lsm", n_cores=0)
+        with pytest.raises(ValueError, match="T_lock_us"):
+            Scenario(engine="lsm", T_lock_us=-0.1)
+        from repro.core.sim import SimConfig
+
+        with pytest.raises(ValueError, match="n_cores"):
+            SimConfig(n_cores=0)
+        with pytest.raises(ValueError, match="n_threads"):
+            SimConfig(n_threads=0)
+        with pytest.raises(ValueError, match="T_lock"):
+            SimConfig(T_lock=-1.0)
+
 
 class TestGoldenScenario:
     def test_file_matches_default_scenario(self):
@@ -354,6 +381,28 @@ class TestCLI:
         assert "scenario/tiny/summary" in out
         art = RunArtifact.from_json(art_out.read_text())
         assert art.scenario.name == "tiny" and len(art.rows) == 2
+
+    def test_cores_flag_reaches_scenario(self, capsys, monkeypatch):
+        """--cores N is device-spec sugar like --devices: it lands in the
+        scenario (and so in every cell's SimConfig) and the CSV prefix."""
+        import benchmarks.run as run_mod
+
+        seen = {}
+
+        def fake_run(scenario, *a, prefix=None, **kw):
+            seen["scenario"], seen["prefix"] = scenario, prefix
+
+        monkeypatch.setattr(run_mod, "run_scenario_cmd", fake_run)
+        self._main(["--engine", "hash-index", "--cores", "2"],
+                   capsys, monkeypatch)
+        assert seen["scenario"].n_cores == 2
+        assert seen["scenario"].sim_config().n_cores == 2
+        assert seen["prefix"].endswith("/cores2")
+
+    def test_cores_flag_validates(self, capsys, monkeypatch):
+        with pytest.raises(SystemExit, match="--cores must be >= 1"):
+            self._main(["--engine", "hash-index", "--cores", "0"],
+                       capsys, monkeypatch)
 
     def test_bad_scenario_spec_exits_with_message(self, capsys, monkeypatch,
                                                   tmp_path):

@@ -271,14 +271,166 @@ class TestGridEquivalence:
         assert abs(grid.mem_stall_total[0, 0] - ref.mem_stall_total) \
             / ref.mem_stall_total < 0.05
 
+    MULTICORE = [
+        dict(n_cores=2),
+        dict(n_cores=4),
+        dict(n_cores=2, T_lock=0.1 * US),
+        dict(n_cores=4, T_lock=0.05 * US),
+    ]
+
+    @pytest.mark.parametrize(
+        "kw", MULTICORE,
+        ids=[f"c{d['n_cores']}" + ("+lock" if "T_lock" in d else "")
+             for d in MULTICORE])
+    def test_multicore_grid_close_to_loop(self, lsm_small, kw):
+        """n_cores > 1 runs natively in the grid (no loop fallback): the
+        per-core run queues, the shared parked heap's global drain
+        horizon, and the lock serialization point all tolerance-track the
+        compiled loop (which is bit-identical to the generic loop)."""
+        cfg = SimConfig(P=12, seed=7, **kw)
+        worst, _ = _grid_vs_loop(cfg, lsm_small.trace,
+                                 [1 * US, 5 * US], [8, 16], n_ops=6000)
+        assert worst < 0.02, f"{kw}: {worst:.2%}"
+
+    def test_multicore_matches_pallas_path(self, lsm_small):
+        cfg = SimConfig(P=12, seed=7, n_cores=2)
+        ref = sweep_grid(cfg, lsm_small.trace, [1 * US, 5 * US], [4, 8],
+                         n_ops=300)
+        pal = sweep_grid(cfg, lsm_small.trace, [1 * US, 5 * US], [4, 8],
+                         n_ops=300, use_pallas=True, substeps=4)
+        for fld in ("throughput", "time", "mem_stall_total",
+                    "mem_accesses"):
+            assert np.array_equal(getattr(ref, fld), getattr(pal, fld)), fld
+
+
+# -- 3b. cohorts, early exit, host sharding ----------------------------------
+
+
+def _het_grids(trace, cfg, n_ops=300, **kw):
+    """The same heterogeneous cells through the cohort early-exit layout
+    and the monolithic single-scan layout (PR 6's shape: every cell padded
+    to T_max, scanned to the one global bound)."""
+    lats = [0.5 * US, 5 * US]
+    cands = [4, 8, 24]            # three pow2 buckets, uneven warmups
+    coh = sweep_grid(cfg, trace, lats, cands, n_ops=n_ops, **kw)
+    mono = sweep_grid(cfg, trace, lats, cands, n_ops=n_ops,
+                      bucket_threads=False, early_exit=False, **kw)
+    return coh, mono
+
+
+class TestCohortEarlyExit:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_cohorts_bit_identical_to_monolithic_per_engine(self, engine):
+        """Cell purity is the whole contract: regrouping cells into
+        cohorts and cutting the scan short at the all-done point may not
+        change a single bit of any cell, for any engine's suboperation
+        mix."""
+        sc = default_scenario(engine, n_keys=2_000, n_wl_ops=600)
+        store = available_engines()[engine](sc.n_keys, **sc.engine_kwargs)
+        wname, wkw = sc.resolved_workload()
+        wl = workloads.create_workload(wname, sc.n_keys, sc.n_wl_ops, **wkw)
+        trace = run_trace(store, wl).trace
+        coh, mono = _het_grids(trace, sc.sim_config())
+        for fld in ("throughput", "time", "mem_stall_total",
+                    "mem_accesses"):
+            assert np.array_equal(getattr(coh, fld),
+                                  getattr(mono, fld)), (engine, fld)
+
+    def test_cohorts_bit_identical_under_pallas(self, lsm_small):
+        coh, mono = _het_grids(lsm_small.trace, SimConfig(P=12, seed=7),
+                               use_pallas=True, substeps=4)
+        assert np.array_equal(coh.throughput, mono.throughput)
+
+    def test_cohorts_bit_identical_with_devices_and_cores(self, lsm_small):
+        # skew from the device axis too: multi-SSD token clocks and a
+        # multi-core thread split exercise the widest per-cell state
+        cfg = SimConfig(P=12, seed=7, n_ssd=2, R_io=250e3,
+                        L_switch=0.3 * US, n_cores=2)
+        coh, mono = _het_grids(lsm_small.trace, cfg)
+        assert np.array_equal(coh.throughput, mono.throughput)
+
+    def test_early_exit_skips_steps_on_uneven_grids(self, lsm_small):
+        """The perf claim in counter form: on a heterogeneous grid the
+        executed steps stay strictly below the scheduled worst-case
+        bound, and the monolithic layout schedules at least as much."""
+        cfg = SimConfig(P=12, seed=7)
+        coh, mono = _het_grids(lsm_small.trace, cfg, n_ops=500)
+        assert 0 < coh.cell_steps_run < coh.cell_steps_bound
+        assert mono.cell_steps_bound >= coh.cell_steps_bound
+        # early_exit=False runs every scheduled step
+        assert mono.cell_steps_run == mono.cell_steps_bound
+
+    def test_host_devices_validation(self, lsm_small):
+        with pytest.raises(ValueError, match="host_devices"):
+            sweep_grid(SimConfig(), lsm_small.trace, [1 * US], [8],
+                       host_devices=0)
+        with pytest.raises(ValueError, match="Pallas"):
+            sweep_grid(SimConfig(), lsm_small.trace, [1 * US], [8],
+                       host_devices=2, use_pallas=True)
+        import jax as _jax
+        avail = len(_jax.devices("cpu"))
+        with pytest.raises(ValueError, match="host CPU"):
+            sweep_grid(SimConfig(), lsm_small.trace, [1 * US], [8],
+                       host_devices=avail + 1)
+
+    @pytest.mark.slow
+    def test_sharded_grid_bit_identical_in_subprocess(self, lsm_small):
+        """host_devices=N shard_maps the cell axis over N XLA host CPU
+        devices; per-cell purity makes the sharded grid bit-identical to
+        the unsharded one.  The device count is fixed at jax init, so the
+        comparison runs in a subprocess with XLA_FLAGS forcing 2 host
+        devices."""
+        import os
+        import subprocess
+        import sys
+        import textwrap
+
+        prog = textwrap.dedent("""
+            import numpy as np
+            from repro.core import workloads
+            from repro.core.engines import LSMStore, run_trace
+            from repro.core.sim import SimConfig
+            from repro.core.sim.replay_jax import sweep_grid
+            US = 1e-6
+            tr = run_trace(LSMStore(4_000),
+                           workloads.zipf(4_000, 1_500, 0.99, (1, 0),
+                                          seed=3)).trace
+            cfg = SimConfig(P=12, seed=7)
+            lats, cands = [1 * US, 5 * US], [8, 16, 24]
+            one = sweep_grid(cfg, tr, lats, cands, n_ops=300)
+            two = sweep_grid(cfg, tr, lats, cands, n_ops=300,
+                             host_devices=2)
+            for fld in ("throughput", "time", "mem_stall_total",
+                        "mem_accesses"):
+                assert np.array_equal(getattr(one, fld),
+                                      getattr(two, fld)), fld
+            print("SHARDED_OK")
+        """)
+        env = dict(os.environ,
+                   XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                              + " --xla_force_host_platform_device_count=2"
+                              ).strip(),
+                   PYTHONPATH=os.pathsep.join(
+                       filter(None, [os.path.join(os.path.dirname(__file__),
+                                                  os.pardir, "src"),
+                              os.environ.get("PYTHONPATH", "")])))
+        out = subprocess.run([sys.executable, "-c", prog], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "SHARDED_OK" in out.stdout
+
 
 # -- 4. validation and API contracts -----------------------------------------
 
 
 class TestValidation:
     def test_rejects_multicore_mixtures_and_empty(self, lsm_small):
-        with pytest.raises(ValueError, match="single-core"):
-            sweep_grid(SimConfig(n_cores=2), lsm_small.trace, [1 * US], [8])
+        # Multi-core fits as long as n_cores * T_max fits the tag bits.
+        with pytest.raises(ValueError, match="tag"):
+            sweep_grid(SimConfig(n_cores=4), lsm_small.trace, [1 * US],
+                       [128])
+        with pytest.raises(ValueError, match="n_cores"):
+            sweep_grid(SimConfig(n_cores=0), lsm_small.trace, [1 * US], [8])
         with pytest.raises(ValueError, match="scalar latencies"):
             sweep_grid(SimConfig(), lsm_small.trace,
                        [[(5 * US, 1.0)]], [8])
@@ -421,5 +573,99 @@ class TestSweepCellCache:
 
         monkeypatch.setattr("sys.argv",
                             ["benchmarks.run", "--sweep-cache-clear"])
+        with pytest.raises(SystemExit, match="requires --sweep-cache"):
+            run_mod.main()
+
+
+class TestSweepCachePrune:
+    """LRU-by-mtime eviction (``prune_sweep_cache``): cache hits refresh a
+    cell's mtime, pruning removes the least-recently-used cells first."""
+
+    @staticmethod
+    def _cell(tmp_path, tag: str, size: int, age_s: float):
+        """A cell-shaped file of ``size`` bytes last used ``age_s`` ago."""
+        import hashlib
+        import os
+        import time
+
+        name = hashlib.sha1(tag.encode()).hexdigest() + ".json"
+        p = tmp_path / name
+        p.write_text("x" * size)
+        t = time.time() - age_s
+        os.utime(p, (t, t))
+        return p
+
+    def test_prune_by_size_evicts_oldest_first(self, tmp_path):
+        from repro.core.sim import prune_sweep_cache
+
+        old = self._cell(tmp_path, "old", 100, age_s=300)
+        mid = self._cell(tmp_path, "mid", 100, age_s=200)
+        new = self._cell(tmp_path, "new", 100, age_s=100)
+        assert prune_sweep_cache(tmp_path, max_bytes=150) == 2
+        assert not old.exists() and not mid.exists()
+        assert new.exists()
+
+    def test_prune_by_age(self, tmp_path):
+        from repro.core.sim import prune_sweep_cache
+
+        stale = self._cell(tmp_path, "stale", 10, age_s=10 * 86400)
+        fresh = self._cell(tmp_path, "fresh", 10, age_s=1 * 86400)
+        assert prune_sweep_cache(tmp_path, max_age_days=5) == 1
+        assert not stale.exists() and fresh.exists()
+
+    def test_prune_leaves_fitting_caches_alone(self, tmp_path):
+        from repro.core.sim import prune_sweep_cache
+
+        kept = self._cell(tmp_path, "kept", 50, age_s=500)
+        foreign = tmp_path / "spec.json"    # not a cell: never touched
+        foreign.write_text("x" * 10_000)
+        assert prune_sweep_cache(tmp_path, max_bytes=100,
+                                 max_age_days=30) == 0
+        assert kept.exists() and foreign.exists()
+        assert prune_sweep_cache(tmp_path / "nonexistent",
+                                 max_bytes=0) == 0
+
+    def test_prune_validates_args(self, tmp_path):
+        from repro.core.sim import prune_sweep_cache
+
+        with pytest.raises(ValueError, match="max_bytes"):
+            prune_sweep_cache(tmp_path, max_bytes=-1)
+        with pytest.raises(ValueError, match="max_age_days"):
+            prune_sweep_cache(tmp_path, max_age_days=-0.5)
+
+    def test_cache_hit_refreshes_mtime(self, lsm_small, tmp_path):
+        """A served cell is recently-used: ``_cache_load`` bumps its mtime
+        so a later prune evicts cold cells before hot ones."""
+        import os
+        import time
+
+        cfg = SimConfig(P=12, seed=7)
+        sweep_latency(cfg, lsm_small, [1 * US], (24,), n_ops=600,
+                      processes=1, cache_dir=tmp_path)
+        (cell,) = tmp_path.glob("*.json")
+        past = time.time() - 9 * 86400
+        os.utime(cell, (past, past))
+        sweep_latency(cfg, lsm_small, [1 * US], (24,), n_ops=600,
+                      processes=1, cache_dir=tmp_path)   # pure cache hit
+        assert os.path.getmtime(cell) > past + 86400
+
+    def test_cli_sweep_cache_prune(self, tmp_path, capsys, monkeypatch):
+        import benchmarks.run as run_mod
+
+        self._cell(tmp_path, "a", 100, age_s=300)
+        survivor = self._cell(tmp_path, "b", 100, age_s=100)
+        monkeypatch.setattr("sys.argv", [
+            "benchmarks.run", "--only", "no_such_bench",
+            "--sweep-cache", str(tmp_path),
+            "--sweep-cache-prune", "0.0001"])    # 100-byte budget
+        run_mod.main()
+        assert "pruned 1 cell(s)" in capsys.readouterr().err
+        assert list(tmp_path.glob("*.json")) == [survivor]
+
+    def test_cli_prune_without_cache_dir_exits(self, monkeypatch):
+        import benchmarks.run as run_mod
+
+        monkeypatch.setattr("sys.argv", [
+            "benchmarks.run", "--sweep-cache-prune-days", "7"])
         with pytest.raises(SystemExit, match="requires --sweep-cache"):
             run_mod.main()

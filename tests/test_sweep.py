@@ -68,11 +68,31 @@ class TestCompiledLoop:
         compiled = simulate_compiled(cfg, lsm_small.trace, 3000)
         _assert_identical(generic, compiled)
 
-    def test_multicore_falls_back_to_generic(self, lsm_small):
-        cfg = SimConfig(L_mem=5 * US, n_threads=16, n_cores=2, seed=7)
+    MULTICORE = [
+        dict(n_cores=2, n_threads=16),
+        dict(n_cores=4, n_threads=8),
+        dict(n_cores=2, n_threads=16, T_lock=0.1 * US),
+        dict(n_cores=3, n_threads=12, L_io_jitter=0.0),
+    ]
+
+    @pytest.mark.parametrize("kw", MULTICORE,
+                             ids=[f"mc{i}" for i in range(len(MULTICORE))])
+    def test_multicore_fast_path_bit_identical(self, lsm_small, kw):
+        """n_cores > 1 no longer falls back: the dedicated multicore fast
+        loop replays the generic loop's per-core run queues, shared parked
+        heap, and RNG draw order bit-for-bit."""
+        cfg = SimConfig(L_mem=5 * US, seed=7, **kw)
         generic = simulate(cfg, trace_source(lsm_small.ops), 3000)
         compiled = simulate_compiled(cfg, lsm_small.trace, 3000)
         _assert_identical(generic, compiled)
+
+    def test_multicore_latency_collection_identical(self, lsm_small):
+        cfg = SimConfig(L_mem=2 * US, n_threads=12, n_cores=2, seed=5)
+        generic = simulate(cfg, trace_source(lsm_small.ops), 2000,
+                           collect_latency=True)
+        compiled = simulate_compiled(cfg, lsm_small.trace, 2000,
+                                     collect_latency=True)
+        assert compiled.op_latencies == generic.op_latencies
 
     def test_latency_and_hist_collection(self, lsm_small):
         cfg = SimConfig(L_mem=2 * US, n_threads=24, seed=5,

@@ -7,7 +7,8 @@ Two modes::
         Schema-validate the checked-in baseline and enforce the repo's
         acceptance floors on whatever suites it contains: warm jax >= 1x
         the loop pipeline on the paper default grid, >= 5x on a
-        >= 2000-cell mega grid.
+        >= 2000-cell mega grid, and cohort early-exit >= 1.5x the
+        monolithic single-scan layout on the heterogeneous (het) grid.
 
     python tools/check_bench.py --fresh smoke.json \
         --baseline BENCH_jax_grid.json [--max-regress 3.0]
@@ -36,10 +37,19 @@ _ENTRY_FIELDS = {
     "jax_warm_s": (int, float), "warm_speedup": (int, float),
 }
 
+# het-suite entries additionally carry the cohort-vs-monolithic
+# measurement and the early-exit wasted-step counters.
+_HET_FIELDS = {
+    "jax_cohort_warm_s": (int, float), "jax_mono_warm_s": (int, float),
+    "mono_speedup": (int, float), "cell_steps_bound": int,
+    "cell_steps_run": int, "steps_saved_frac": (int, float),
+}
+
 # Acceptance floors enforced on the checked-in baseline.
 DEFAULT_MIN_SPEEDUP = 1.0
 MEGA_MIN_SPEEDUP = 5.0
 MEGA_MIN_CELLS = 2000
+HET_MIN_MONO_SPEEDUP = 1.5
 
 
 def fail(msg: str) -> None:
@@ -82,6 +92,18 @@ def validate_schema(doc: dict, path: str) -> None:
                       "warm_speedup"):
             if e[field] <= 0:
                 fail(f"{path}: entry {e['name']!r}: {field} must be > 0")
+        if e["name"].startswith("het"):
+            for field, typ in _HET_FIELDS.items():
+                if field not in e:
+                    fail(f"{path}: het entry {e['name']!r} missing "
+                         f"{field!r}")
+                if (not isinstance(e[field], typ)
+                        or isinstance(e[field], bool)):
+                    fail(f"{path}: entry {e['name']!r} field {field!r} "
+                         f"has type {type(e[field]).__name__}")
+            if e["cell_steps_run"] > e["cell_steps_bound"]:
+                fail(f"{path}: entry {e['name']!r}: cell_steps_run "
+                     "exceeds cell_steps_bound")
     summary = doc.get("summary")
     if not isinstance(summary, dict) or not summary:
         fail(f"{path}: summary must be a non-empty object")
@@ -111,6 +133,18 @@ def check_floors(doc: dict, path: str) -> list[str]:
                  f"{MEGA_MIN_SPEEDUP}x floor")
         msgs.append(f"mega grid: {s}x over {cells} cells "
                     f"(floor {MEGA_MIN_SPEEDUP}x)")
+    if "het" in summary:
+        agg = summary["het"]
+        if "mono_speedup" not in agg:
+            fail(f"{path}: het summary missing 'mono_speedup'")
+        s = agg["mono_speedup"]
+        if s < HET_MIN_MONO_SPEEDUP:
+            fail(f"{path}: het-grid cohort-vs-monolithic speedup {s}x is "
+                 f"below the {HET_MIN_MONO_SPEEDUP}x floor")
+        msgs.append(
+            f"het grid: cohorts {s}x over monolithic "
+            f"(floor {HET_MIN_MONO_SPEEDUP}x; early exit saved "
+            f"{agg.get('steps_saved_frac', 0):.1%} of bounded steps)")
     return msgs
 
 
