@@ -31,7 +31,11 @@ batch, ``--backend-host-devices`` shards the grid's cells over XLA host
 CPU devices).  ``--artifact``
 writes the scenario run's full :class:`~repro.core.experiment.RunArtifact`
 (sweep table + trace stats + model predictions + config provenance) as
-JSON.  ``--engine`` accepts any name or alias in the ``repro.core.engines``
+JSON.  ``--arrival KIND --rate OPS_PER_S`` (optionally ``--burst FRAC``)
+switches a scenario/engine sweep from the closed loop to an open-loop
+arrival process and reports per-cell sojourn tail percentiles
+(``p50_us``/``p99_us``/``miss_rate`` in the derived column; see
+``docs/TAIL_LATENCY.md``).  ``--engine`` accepts any name or alias in the ``repro.core.engines``
 registry (underscores work: ``hash_index`` == ``hash-index``); ``--devices``
 sets the simulated SSD count (per-device IOPS token clocks, round-robin
 striping, switch fan-out hop) and ``--cores`` the simulated host CPU core
@@ -73,6 +77,15 @@ def emit_artifact(art, prefix: str) -> None:
                    f"model_kops={row.model_throughput / 1e3:.1f}")
         if row.mean_op_latency_us is not None:
             derived += f";op_latency_us={row.mean_op_latency_us:.3f}"
+        if row.tail is not None:
+            t = row.tail
+            if t["p99_us"] is not None:
+                derived += (f";p50_us={t['p50_us']:.3f}"
+                            f";p99_us={t['p99_us']:.3f}")
+            derived += f";miss_rate={t['miss_rate']:.4f}"
+            if t["offered_load"] is not None:
+                derived += (f";offered_kops={t['offered_load'] / 1e3:.1f}"
+                            f";achieved_kops={t['achieved_load'] / 1e3:.1f}")
         common.emit(f"{prefix}/{row.label()}", 1e6 / row.throughput, derived)
     last = art.rows[-1]
     common.emit(
@@ -88,17 +101,27 @@ def run_scenario_cmd(scenario, artifact_out: str | None,
                      collect_latency: bool, adaptive: bool,
                      backend: str = "loop",
                      prefix: str | None = None,
-                     backend_opts: dict | None = None) -> None:
+                     backend_opts: dict | None = None,
+                     arrival: dict | None = None) -> None:
     """Execute one scenario through the public experiment API.
 
     ``backend_opts`` are jax-backend tuning fields of
     :class:`~repro.core.experiment.RunOptions`
-    (``use_pallas``/``unroll``/``substeps``/``host_devices``)."""
+    (``use_pallas``/``unroll``/``substeps``/``host_devices``).
+    ``arrival`` (an :class:`~repro.core.sim.ArrivalSpec` dict from
+    ``--arrival/--rate/--burst``) overrides the scenario's driver and
+    switches on per-cell tail percentiles."""
+    import dataclasses as _dc
+
     from repro.core.experiment import Experiment
 
     from . import common
 
     try:
+        if arrival is not None:
+            scenario = _dc.replace(scenario, arrival=arrival)
+        # an open-loop run without tail stats is useless -- collect them
+        collect_percentiles = bool(scenario.arrival)
         # display_name resolves the engine too: unknown names fail here,
         # before the (expensive) run, with the registry listing
         prefix = prefix or f"scenario/{scenario.display_name}"
@@ -106,6 +129,7 @@ def run_scenario_cmd(scenario, artifact_out: str | None,
             scenario,
             common.run_options(collect_latency=collect_latency,
                                adaptive=adaptive, backend=backend,
+                               collect_percentiles=collect_percentiles,
                                **(backend_opts or {})),
         ).run()
     except KeyError as e:  # unknown engine/workload: resolution is lazy and
@@ -182,6 +206,20 @@ def main() -> None:
                     help="with --scenario/--engine: warm-started thread "
                          "search instead of the full grid (cells run "
                          "serially; --processes has no effect)")
+    ap.add_argument("--arrival", default=None,
+                    choices=("poisson", "bursty", "diurnal"),
+                    help="with --scenario/--engine: drive the sweep "
+                         "open-loop with this arrival process instead of "
+                         "the closed loop (requires --rate; records "
+                         "per-cell sojourn tail percentiles, see "
+                         "docs/TAIL_LATENCY.md)")
+    ap.add_argument("--rate", type=float, default=None, metavar="OPS_PER_S",
+                    help="with --arrival: offered load in ops/sec "
+                         "(time-average rate for bursty/diurnal)")
+    ap.add_argument("--burst", type=float, default=None, metavar="FRAC",
+                    help="with --arrival bursty: ON-state duty cycle in "
+                         "(0, 1] (default 0.25; the ON rate is "
+                         "rate / FRAC, so the time-average stays --rate)")
     ap.add_argument("--engine", default=None, metavar="NAME",
                     help="sugar for --scenario: sweep one registered "
                          "engine's default matrix scenario (any registry "
@@ -247,6 +285,20 @@ def main() -> None:
                     "substeps": args.backend_substeps,
                     "host_devices": args.backend_host_devices}
 
+    arrival = None
+    if args.arrival is not None:
+        if args.rate is None or args.rate <= 0:
+            sys.exit("--arrival requires --rate OPS_PER_S > 0")
+        arrival = {"kind": args.arrival, "rate": args.rate}
+        if args.burst is not None:
+            if args.arrival != "bursty":
+                sys.exit("--burst only applies to --arrival bursty")
+            if not 0 < args.burst <= 1:
+                sys.exit("--burst must be in (0, 1]")
+            arrival["on_fraction"] = args.burst
+    elif args.rate is not None or args.burst is not None:
+        sys.exit("--rate/--burst require --arrival KIND")
+
     print("name,us_per_call,derived")
 
     if args.scenario is not None:
@@ -263,7 +315,7 @@ def main() -> None:
             sys.exit(f"bad scenario spec {args.scenario!r}: {e}")
         run_scenario_cmd(scenario, args.artifact, args.collect_latency,
                          args.adaptive, args.backend,
-                         backend_opts=backend_opts)
+                         backend_opts=backend_opts, arrival=arrival)
         return
 
     if args.engine is not None:
@@ -284,7 +336,7 @@ def main() -> None:
         run_scenario_cmd(scenario, args.artifact, args.collect_latency,
                          args.adaptive, args.backend,
                          prefix=prefix,
-                         backend_opts=backend_opts)
+                         backend_opts=backend_opts, arrival=arrival)
         return
 
     from . import kernels_bench, paper_figs, roofline_table

@@ -34,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 import io
 import json
+import math
 from dataclasses import dataclass, field
 from typing import Any, Sequence
 
@@ -41,7 +42,7 @@ import numpy as np
 
 from .engines import TraceResult, get_engine, run_trace
 from .latency_model import US, OpParams, theta_prob_inv
-from .sim import SimConfig, SweepPoint, sweep_latency
+from .sim import ArrivalSpec, SimConfig, SweepPoint, sweep_latency
 from .workloads import Workload, create_workload, get_workload
 
 __all__ = [
@@ -132,12 +133,18 @@ class Scenario:
     P: int = 12
     T_sw_us: float = 0.05
     seed: int = 7
+    # open-loop driver: an ArrivalSpec.to_dict() (empty = closed loop).
+    # NOTE: ArrivalSpec fields are SI -- ``rate`` in ops/sec, ``period``
+    # and ``deadline`` in *seconds* -- unlike the scenario's _us fields.
+    arrival: dict = field(default_factory=dict)
     name: str = ""
 
     def __post_init__(self):
         for f in ("engine_kwargs", "workload_kwargs", "latencies_us",
-                  "thread_candidates"):
+                  "thread_candidates", "arrival"):
             object.__setattr__(self, f, _norm(getattr(self, f)))
+        if self.arrival:
+            ArrivalSpec.from_dict(dict(self.arrival))   # validate eagerly
         if not self.latencies_us or not self.thread_candidates:
             raise ValueError(
                 "Scenario sweep axes must be non-empty "
@@ -192,6 +199,12 @@ class Scenario:
             for l in self.latencies_us
         ]
 
+    def arrival_spec(self) -> ArrivalSpec | None:
+        """The open-loop :class:`~repro.core.sim.ArrivalSpec`, or ``None``
+        for the closed-loop driver."""
+        return (ArrivalSpec.from_dict(dict(self.arrival))
+                if self.arrival else None)
+
     # -- serialization -------------------------------------------------------
 
     def to_dict(self) -> dict:
@@ -237,6 +250,7 @@ class RunOptions:
     processes: int | None = None       # sweep worker processes (None: auto)
     cache_dir: str | None = None       # on-disk sweep-cell cache
     collect_latency: bool = False      # per-op latencies per winning cell
+    collect_percentiles: bool = False  # p50/p90/p99 tail summary per cell
     adaptive: bool = False             # warm-started thread search
     backend: str = "loop"              # "loop" interpreters | "jax" grid
     use_pallas: bool = False           # jax: fused whole-step kernel
@@ -255,10 +269,18 @@ class SweepRow:
     model_throughput: float       # paper probabilistic model at this point
     per_thread: tuple = ()        # ((n_threads, throughput), ...)
     mean_op_latency_us: float | None = None
+    # Tail summary of the winning cell when RunOptions.collect_percentiles
+    # was on (None otherwise, and in artifacts predating it): p50_us /
+    # p90_us / p99_us / max_us (None when every op missed), count, missed,
+    # miss_rate, source ("exact" | "hist"), offered_load (ops/sec, None
+    # closed loop) and achieved_load (measured throughput).
+    tail: dict | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "L_us", _norm(self.L_us))
         object.__setattr__(self, "per_thread", _norm(self.per_thread))
+        if self.tail is not None:
+            object.__setattr__(self, "tail", dict(self.tail))
 
     @property
     def mean_latency_us(self) -> float:
@@ -428,12 +450,14 @@ class Experiment:
         tr = run_trace(store, wl, warmup_frac=s.warmup_frac)
         p = tr.op_params(store.times, P=s.P, T_sw=s.T_sw_us * US)
         cfg = s.sim_config()
+        arrival = s.arrival_spec()
         pts = sweep_latency(
             cfg, tr.trace, s.latencies_sec(), s.thread_candidates,
             n_ops=s.n_ops, processes=o.processes, cache_dir=o.cache_dir,
             collect_latency=o.collect_latency, adaptive=o.adaptive,
             backend=o.backend, use_pallas=o.use_pallas, unroll=o.unroll,
             substeps=o.substeps, host_devices=o.host_devices,
+            arrival=arrival, collect_percentiles=o.collect_percentiles,
         )
         # Eq. 14 outer IO caps for the model column, matching the scenario's
         # declared device pool (aggregate over the n_ssd per-device rates;
@@ -444,7 +468,7 @@ class Experiment:
         if s.B_io > 0:
             cap_inv = max(cap_inv, p.S * cfg.A_io / (s.n_ssd * s.B_io))
         rows = tuple(
-            _make_row(l_us, pt, p, cap_inv, o.collect_latency)
+            _make_row(l_us, pt, p, cap_inv, o.collect_latency, arrival)
             for l_us, pt in zip(s.latencies_us, pts)
         )
         wname, _ = s.resolved_workload()
@@ -464,8 +488,34 @@ class Experiment:
         )
 
 
+def _tail_dict(pt: SweepPoint, arrival: ArrivalSpec | None) -> dict | None:
+    """Flatten a cell's :class:`LatencySummary` into the JSON-friendly
+    ``SweepRow.tail`` mapping (microseconds; NaN percentiles from all-missed
+    cells become ``None`` so artifacts round-trip through strict JSON)."""
+    summ = pt.result.latency_summary
+    if summ is None:
+        return None
+
+    def us_or_none(v: float) -> float | None:
+        return None if math.isnan(v) else float(v) / US
+
+    return {
+        "p50_us": us_or_none(summ.p50),
+        "p90_us": us_or_none(summ.p90),
+        "p99_us": us_or_none(summ.p99),
+        "max_us": us_or_none(summ.max),
+        "count": int(summ.count),
+        "missed": int(summ.missed),
+        "miss_rate": float(summ.miss_rate),
+        "source": summ.source,
+        "offered_load": (
+            float(arrival.offered_rate) if arrival is not None else None),
+        "achieved_load": float(pt.throughput),
+    }
+
+
 def _make_row(l_us, pt: SweepPoint, p: OpParams, cap_inv: float,
-              collected: bool) -> SweepRow:
+              collected: bool, arrival: ArrivalSpec | None = None) -> SweepRow:
     # Mixtures are fed to the closed-form model as their expected latency
     # (the model takes a scalar L; the simulator samples the real mixture).
     # cap_inv is the Eq. 14 device-cap floor on reciprocal throughput, so
@@ -480,6 +530,7 @@ def _make_row(l_us, pt: SweepPoint, p: OpParams, cap_inv: float,
         per_thread=tuple(pt.per_thread.items()),
         mean_op_latency_us=(
             float(pt.result.mean_op_latency / US) if collected else None),
+        tail=_tail_dict(pt, arrival),
     )
 
 

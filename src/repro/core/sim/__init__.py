@@ -2,6 +2,9 @@
 testbed"), as a layered package:
 
   * :mod:`.config`      -- :class:`SimConfig` / :class:`SimResult`
+  * :mod:`.arrivals`    -- open-loop arrival processes (Poisson, bursty,
+                           diurnal, multi-tenant mixes) and the sojourn
+                           tail-latency accumulator shared by all backends
   * :mod:`.devices`     -- memory-latency sampling, per-SSD token clocks
                            (``n_ssd`` devices, round-robin striping, switch
                            fan-out hop), per-core prefetch queue + throttle
@@ -33,6 +36,14 @@ trace replay) or, on the fast path, from a columnar
 :mod:`repro.core.engines`.
 """
 from ..trace_ir import CPU, MEM, POSTIO, PREIO, US, CompiledTrace, Op  # noqa: F401
+from .arrivals import (  # noqa: F401
+    HIST_REL_ERROR,
+    ArrivalSpec,
+    LatencySummary,
+    generate_arrivals,
+    summarize_exact,
+    summarize_hist,
+)
 from .config import SimConfig, SimResult  # noqa: F401
 from .devices import PrefetchUnit, SSDClocks, sample_lmem  # noqa: F401
 from .engine_loop import (  # noqa: F401
@@ -71,4 +82,10 @@ __all__ = [
     "BACKENDS",
     "clear_sweep_cache",
     "prune_sweep_cache",
+    "ArrivalSpec",
+    "LatencySummary",
+    "generate_arrivals",
+    "summarize_exact",
+    "summarize_hist",
+    "HIST_REL_ERROR",
 ]

@@ -64,6 +64,11 @@ class SimResult:
     mem_accesses: int
     op_latencies: list[float] = field(default_factory=list)
     load_stalls: list[float] = field(default_factory=list)  # Fig. 10 histogram
+    # Open-loop tail-latency extras (see repro.core.sim.arrivals): measured
+    # ops whose sojourn blew the SLA deadline, and the per-cell percentile
+    # summary (an arrivals.LatencySummary) when collect_percentiles was on.
+    missed_ops: int = 0
+    latency_summary: object | None = None
 
     @property
     def mean_op_latency(self) -> float:

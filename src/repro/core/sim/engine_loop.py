@@ -27,6 +27,7 @@ from dataclasses import replace
 from typing import Callable, Iterable, Sequence
 
 from ..trace_ir import CPU, MEM, POSTIO, PREIO, CompiledTrace, Op
+from .arrivals import summarize_exact
 from .config import DEFAULT_THREAD_CANDIDATES, SimConfig, SimResult
 from .devices import SSDClocks, sample_lmem
 from .scheduler import Core, ParkedHeap, Thread
@@ -78,16 +79,40 @@ def simulate(
     n_ops: int,
     warmup_ops: int | None = None,
     collect_latency: bool = False,
+    *,
+    arrivals: Sequence[float] | None = None,
+    collect_percentiles: bool = False,
+    deadline: float = 0.0,
 ) -> SimResult:
     """Run the event simulation until ``n_ops`` operations complete.
 
     ``warmup_ops`` (default: 2 ops per thread) are excluded from throughput
     so the pipeline fill does not bias short runs.
+
+    ``arrivals`` switches the driver open loop: a monotone timestamp
+    sequence (seconds; see :func:`.arrivals.generate_arrivals`) consumed
+    one entry per op issue, in issue order (threads in tid order at init,
+    then one per completion).  An op whose arrival is in the future parks
+    its thread on the shared wake heap until the arrival clock, so
+    queueing delay becomes observable; per-op latency is then the
+    *sojourn* (arrival -> completion).  With ``collect_percentiles`` the
+    measured sojourns are summarized into ``SimResult.latency_summary``;
+    ops whose sojourn exceeds ``deadline`` (seconds, 0 = disabled) count
+    as ``missed_ops`` and are excluded from the percentiles.  The arrival
+    timestamps come from a separate RNG stream, so closed-loop results
+    (``arrivals=None``) are untouched.
     """
     rng = random.Random(cfg.seed)
     total_threads = cfg.n_threads * cfg.n_cores
     if warmup_ops is None:
         warmup_ops = 2 * total_threads
+
+    arr_seq = None if arrivals is None else list(arrivals)
+    open_loop = arr_seq is not None
+    n_arr = len(arr_seq) if open_loop else 0
+    if open_loop and n_arr == 0:
+        raise ValueError("arrivals must be non-empty when provided")
+    arr_i = 0
 
     cores = [Core() for _ in range(cfg.n_cores)]
     ssd = SSDClocks(cfg)
@@ -96,10 +121,18 @@ def simulate(
     parked = ParkedHeap()
 
     def start_op(th: Thread, now: float) -> None:
+        nonlocal arr_i
         op = op_source(rng)
         th.subops = op.subops
         th.idx = 0
-        th.op_start = now
+        if open_loop:
+            # Ops are stamped with their arrival, not the fetch time; a
+            # stream shorter than the run clamps to its last timestamp
+            # (sweep_latency always generates enough -- see _arrival_count).
+            th.op_start = arr_seq[arr_i] if arr_i < n_arr else arr_seq[-1]
+            arr_i += 1
+        else:
+            th.op_start = now
 
     for cid, core in enumerate(cores):
         for t in range(cfg.n_threads):
@@ -108,9 +141,13 @@ def simulate(
             # The first MEM access of the very first op: treat its prefetch
             # as issued at a random phase before t=0 (threads never start in
             # lockstep on real hardware), so the warm-up does not seed the
-            # pathological aligned schedule of Fig. 7(a).
-            th.pf_ready = rng.random() * sample_lmem(cfg, rng)
-            core.ready.append(th)
+            # pathological aligned schedule of Fig. 7(a).  Open loop: the
+            # phase offset is anchored at the op's arrival instead.
+            th.pf_ready = th.op_start + rng.random() * sample_lmem(cfg, rng)
+            if th.op_start > 0.0:
+                parked.park(th.op_start, cid, th)
+            else:
+                core.ready.append(th)
 
     done = 0
     counted = 0
@@ -119,6 +156,8 @@ def simulate(
     mem_accesses = 0
     op_lat: list[float] = []
     stalls: list[float] = []
+    lat_acc: list[float] | None = [] if collect_percentiles else None
+    missed = 0
     hist = cfg.collect_load_hist
 
     # Event loop over cores ordered by their local clocks.
@@ -182,8 +221,15 @@ def simulate(
                 if t_start_measure is None:
                     t_start_measure = now
                 counted += 1
-                if collect_latency:
-                    op_lat.append(now - th.op_start)
+                if collect_latency or lat_acc is not None:
+                    sojourn = now - th.op_start
+                    if collect_latency:
+                        op_lat.append(sojourn)
+                    if lat_acc is not None:
+                        if deadline > 0.0 and sojourn > deadline:
+                            missed += 1
+                        else:
+                            lat_acc.append(sojourn)
             start_op(th, now)
             if cfg.T_lock > 0.0:
                 start = max(now, lock_next)
@@ -199,13 +245,22 @@ def simulate(
 
         if nkind == MEM:
             # Issue the prefetch for the next access (pointer now known).
-            th.pf_ready = core.prefetch.issue(now, cfg, rng)
+            # Open loop: a not-yet-arrived op cannot have issued its
+            # prefetch before its arrival.
+            t_iss = now
+            if end_of_op and th.op_start > t_iss:
+                t_iss = th.op_start
+            th.pf_ready = core.prefetch.issue(t_iss, cfg, rng)
 
         now += cfg.T_sw  # one context switch per suboperation (yield)
         core.now = now
 
         if park_until is not None:
             parked.park(max(park_until, now), cid, th)
+        elif end_of_op and th.op_start > now:
+            # Open loop: the next op has not arrived yet -- park until the
+            # arrival clock (closed loop never takes this branch).
+            parked.park(th.op_start, cid, th)
         else:
             core.ready.append(th)
         heapq.heappush(core_heap, (core.now, cid))
@@ -221,6 +276,9 @@ def simulate(
         mem_accesses=mem_accesses,
         op_latencies=op_lat,
         load_stalls=stalls,
+        missed_ops=missed,
+        latency_summary=(summarize_exact(lat_acc, missed)
+                         if lat_acc is not None else None),
     )
 
 
@@ -230,19 +288,26 @@ def simulate_compiled(
     n_ops: int,
     warmup_ops: int | None = None,
     collect_latency: bool = False,
+    *,
+    arrivals: Sequence[float] | None = None,
+    collect_percentiles: bool = False,
+    deadline: float = 0.0,
 ) -> SimResult:
     """Fast replay of a :class:`CompiledTrace` (bit-identical to the generic
     loop over ``trace_source(trace.to_ops())``; see module docstring).
 
     The specialization covers all device features (eps, rho, latency
     mixtures, per-SSD token clocks with ``n_ssd`` round-robin striping, the
-    ``L_switch`` fan-out hop, memory throttle, T_lock); multi-core configs
-    route to :func:`_simulate_compiled_multicore`, which keeps the generic
-    loop's core-heap event order and RNG draw order.
+    ``L_switch`` fan-out hop, memory throttle, T_lock) and the open-loop
+    arrival/percentile extensions (see :func:`simulate`); multi-core
+    configs route to :func:`_simulate_compiled_multicore`, which keeps the
+    generic loop's core-heap event order and RNG draw order.
     """
     if cfg.n_cores != 1:
-        return _simulate_compiled_multicore(cfg, trace, n_ops, warmup_ops,
-                                            collect_latency)
+        return _simulate_compiled_multicore(
+            cfg, trace, n_ops, warmup_ops, collect_latency,
+            arrivals=arrivals, collect_percentiles=collect_percentiles,
+            deadline=deadline)
 
     rng = random.Random(cfg.seed)
     rrandom = rng.random
@@ -280,11 +345,22 @@ def simulate_compiled(
     # only the first draw picks the starting offset.
     cursor = -1
 
+    arr_seq = None if arrivals is None else list(arrivals)
+    open_loop = arr_seq is not None
+    n_arr = len(arr_seq) if open_loop else 0
+    if open_loop and n_arr == 0:
+        raise ValueError("arrivals must be non-empty when provided")
+
     n_threads = cfg.n_threads
     t_idx = [0] * n_threads        # current flat subop index
     t_end = [0] * n_threads        # flat end index of the current op
     t_pf = [0.0] * n_threads       # prefetch completion for subops[idx]
     t_opstart = [0.0] * n_threads
+
+    parked: list[tuple[float, int, int]] = []   # (wake, seq, tid)
+    seq = 0
+    heappush = heapq.heappush
+    heappop = heapq.heappop
 
     ready: deque[int] = deque()     # FIFO ring of tids
     for tid in range(n_threads):
@@ -294,15 +370,18 @@ def simulate_compiled(
         t_idx[tid] = op_starts[cursor]
         t_end[tid] = op_ends[cursor]
         cursor = (cursor + 1) % n_trace
-        t_pf[tid] = rrandom() * (lmem_scalar if simple_mem else sample())
-        ready.append(tid)
+        a0 = (arr_seq[tid] if tid < n_arr else arr_seq[-1]) if open_loop \
+            else 0.0
+        t_opstart[tid] = a0
+        t_pf[tid] = a0 + rrandom() * (lmem_scalar if simple_mem else sample())
+        if a0 > 0.0:
+            seq += 1
+            heappush(parked, (a0, seq, tid))
+        else:
+            ready.append(tid)
+    arr_i = n_threads
     ready_pop = ready.popleft
     ready_push = ready.append
-
-    parked: list[tuple[float, int, int]] = []   # (wake, seq, tid)
-    seq = 0
-    heappush = heapq.heappush
-    heappop = heapq.heappop
 
     pf_inflight: list[float] = []   # the single core's prefetch heap
     pf_bw_next = 0.0
@@ -325,6 +404,8 @@ def simulate_compiled(
     mem_accesses = 0
     op_lat: list[float] = []
     stalls: list[float] = []
+    lat_acc: list[float] | None = [] if collect_percentiles else None
+    missed = 0
     measuring = warmup_ops <= 0
 
     now = 0.0
@@ -372,8 +453,15 @@ def simulate_compiled(
                 if t_start_measure is None:
                     t_start_measure = now
                 counted += 1
-                if collect_latency:
-                    op_lat.append(now - t_opstart[tid])
+                if collect_latency or lat_acc is not None:
+                    sojourn = now - t_opstart[tid]
+                    if collect_latency:
+                        op_lat.append(sojourn)
+                    if lat_acc is not None:
+                        if deadline > 0.0 and sojourn > deadline:
+                            missed += 1
+                        else:
+                            lat_acc.append(sojourn)
             # Start the next op from the shared cyclic cursor.  The
             # rrandrange draw is discarded on purpose: the legacy
             # trace_source evaluates one per fetch (setdefault argument),
@@ -383,7 +471,12 @@ def simulate_compiled(
             i = op_starts[cursor]
             t_end[tid] = op_ends[cursor]
             cursor = (cursor + 1) % n_trace
-            t_opstart[tid] = now
+            if open_loop:
+                t_opstart[tid] = (arr_seq[arr_i] if arr_i < n_arr
+                                  else arr_seq[-1])
+                arr_i += 1
+            else:
+                t_opstart[tid] = now
             if T_lock > 0.0:
                 start = now if now > lock_next else lock_next
                 now = start + T_lock
@@ -408,13 +501,17 @@ def simulate_compiled(
             park_until = svc + lat_io + L_switch
 
         if kinds[i] == 0:  # next subop is MEM: issue its prefetch now
+            # Open loop: a not-yet-arrived op issues at its arrival clock.
+            t_iss = now
+            if end_of_op and t_opstart[tid] > t_iss:
+                t_iss = t_opstart[tid]
             pq = pf_inflight
-            while pq and pq[0] <= now:
+            while pq and pq[0] <= t_iss:
                 heappop(pq)
             if len(pq) < P:
-                start = now
+                start = t_iss
             else:
-                start = now if now > pq[0] else pq[0]
+                start = t_iss if t_iss > pq[0] else pq[0]
             if B_mem > 0.0:
                 if pf_bw_next > start:
                     start = pf_bw_next
@@ -431,6 +528,11 @@ def simulate_compiled(
         if park_until is not None:
             seq += 1
             heappush(parked, (park_until if park_until > now else now, seq, tid))
+        elif end_of_op and t_opstart[tid] > now:
+            # Open loop: park until the next op's arrival (closed loop
+            # never takes this branch -- t_opstart <= now there).
+            seq += 1
+            heappush(parked, (t_opstart[tid], seq, tid))
         else:
             ready_push(tid)
 
@@ -444,6 +546,9 @@ def simulate_compiled(
         mem_accesses=mem_accesses,
         op_latencies=op_lat,
         load_stalls=stalls,
+        missed_ops=missed,
+        latency_summary=(summarize_exact(lat_acc, missed)
+                         if lat_acc is not None else None),
     )
 
 
@@ -453,6 +558,10 @@ def _simulate_compiled_multicore(
     n_ops: int,
     warmup_ops: int | None = None,
     collect_latency: bool = False,
+    *,
+    arrivals: Sequence[float] | None = None,
+    collect_percentiles: bool = False,
+    deadline: float = 0.0,
 ) -> SimResult:
     """Multi-core compiled fast loop, bit-identical to :func:`simulate`.
 
@@ -502,10 +611,23 @@ def _simulate_compiled_multicore(
     t_pf = [0.0] * total_threads
     t_opstart = [0.0] * total_threads
 
+    arr_seq = None if arrivals is None else list(arrivals)
+    open_loop = arr_seq is not None
+    n_arr = len(arr_seq) if open_loop else 0
+    if open_loop and n_arr == 0:
+        raise ValueError("arrivals must be non-empty when provided")
+
     ready: list[deque[int]] = [deque() for _ in range(n_cores)]
     core_now = [0.0] * n_cores
     pf_inflight: list[list[float]] = [[] for _ in range(n_cores)]
     pf_bw_next = [0.0] * n_cores
+
+    # Shared parked heap: (wake, seq, cid, tid).  seq breaks wake-time ties
+    # FIFO, matching ParkedHeap's deterministic ordering.
+    parked: list[tuple[float, int, int, int]] = []
+    seq = 0
+    heappush = heapq.heappush
+    heappop = heapq.heappop
 
     for cid in range(n_cores):
         rq = ready[cid]
@@ -517,8 +639,17 @@ def _simulate_compiled_multicore(
             t_idx[tid] = op_starts[cursor]
             t_end[tid] = op_ends[cursor]
             cursor = (cursor + 1) % n_trace
-            t_pf[tid] = rrandom() * (lmem_scalar if simple_mem else sample())
-            rq.append(tid)
+            a0 = (arr_seq[tid] if tid < n_arr else arr_seq[-1]) \
+                if open_loop else 0.0
+            t_opstart[tid] = a0
+            t_pf[tid] = a0 + rrandom() * (lmem_scalar if simple_mem
+                                          else sample())
+            if a0 > 0.0:
+                seq += 1
+                heappush(parked, (a0, seq, cid, tid))
+            else:
+                rq.append(tid)
+    arr_i = total_threads
 
     n_ssd = cfg.n_ssd
     if n_ssd < 1:
@@ -528,13 +659,6 @@ def _simulate_compiled_multicore(
     io_bw_next = [0.0] * n_ssd
     io_rr = 0
     lock_next = 0.0
-
-    # Shared parked heap: (wake, seq, cid, tid).  seq breaks wake-time ties
-    # FIFO, matching ParkedHeap's deterministic ordering.
-    parked: list[tuple[float, int, int, int]] = []
-    seq = 0
-    heappush = heapq.heappush
-    heappop = heapq.heappop
 
     core_heap = [(0.0, cid) for cid in range(n_cores)]
     heapq.heapify(core_heap)
@@ -546,6 +670,8 @@ def _simulate_compiled_multicore(
     mem_accesses = 0
     op_lat: list[float] = []
     stalls: list[float] = []
+    lat_acc: list[float] | None = [] if collect_percentiles else None
+    missed = 0
 
     while counted < n_ops:
         # Wake threads whose IO completed before the earliest core time.
@@ -614,15 +740,27 @@ def _simulate_compiled_multicore(
                 if t_start_measure is None:
                     t_start_measure = now
                 counted += 1
-                if collect_latency:
-                    op_lat.append(now - t_opstart[tid])
+                if collect_latency or lat_acc is not None:
+                    sojourn = now - t_opstart[tid]
+                    if collect_latency:
+                        op_lat.append(sojourn)
+                    if lat_acc is not None:
+                        if deadline > 0.0 and sojourn > deadline:
+                            missed += 1
+                        else:
+                            lat_acc.append(sojourn)
             # Shared cyclic cursor; the discarded rrandrange mirrors
             # trace_source's one-draw-per-fetch (see simulate_compiled).
             rrandrange(n_trace)
             i = op_starts[cursor]
             t_end[tid] = op_ends[cursor]
             cursor = (cursor + 1) % n_trace
-            t_opstart[tid] = now
+            if open_loop:
+                t_opstart[tid] = (arr_seq[arr_i] if arr_i < n_arr
+                                  else arr_seq[-1])
+                arr_i += 1
+            else:
+                t_opstart[tid] = now
             if T_lock > 0.0:
                 start = now if now > lock_next else lock_next
                 now = start + T_lock
@@ -647,13 +785,17 @@ def _simulate_compiled_multicore(
             park_until = svc + lat_io + L_switch
 
         if kinds[i] == 0:  # next subop is MEM: this core's prefetch unit
+            # Open loop: a not-yet-arrived op issues at its arrival clock.
+            t_iss = now
+            if end_of_op and t_opstart[tid] > t_iss:
+                t_iss = t_opstart[tid]
             pq = pf_inflight[cid]
-            while pq and pq[0] <= now:
+            while pq and pq[0] <= t_iss:
                 heappop(pq)
             if len(pq) < P:
-                start = now
+                start = t_iss
             else:
-                start = now if now > pq[0] else pq[0]
+                start = t_iss if t_iss > pq[0] else pq[0]
             if B_mem > 0.0:
                 if pf_bw_next[cid] > start:
                     start = pf_bw_next[cid]
@@ -672,6 +814,10 @@ def _simulate_compiled_multicore(
             seq += 1
             heappush(parked,
                      (park_until if park_until > now else now, seq, cid, tid))
+        elif end_of_op and t_opstart[tid] > now:
+            # Open loop: park until the next op's arrival.
+            seq += 1
+            heappush(parked, (t_opstart[tid], seq, cid, tid))
         else:
             rq.append(tid)
         heappush(core_heap, (now, cid))
@@ -687,6 +833,9 @@ def _simulate_compiled_multicore(
         mem_accesses=mem_accesses,
         op_latencies=op_lat,
         load_stalls=stalls,
+        missed_ops=missed,
+        latency_summary=(summarize_exact(lat_acc, missed)
+                         if lat_acc is not None else None),
     )
 
 

@@ -115,6 +115,7 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from ..trace_ir import CPU, CompiledTrace
+from .arrivals import HIST_BINS, LatencySummary, hist_bin_value
 from .config import SimConfig, SimResult
 
 __all__ = ["TraceArrays", "GridResult", "sweep_grid", "lower_trace"]
@@ -203,17 +204,42 @@ class GridResult:
     ops: int                      # measured ops per cell (same for all)
     steps: int                    # scan length bound (max across cohorts)
     cell_steps_bound: int = 0     # sum over cells of their cohort's bound
-    cell_steps_run: int = 0       # sum over cells of executed steps
+    cell_steps_run: int = 0      # sum over cells of executed steps
+    # Tail-latency planes, present only when ``collect_percentiles`` was
+    # on: histogram-derived percentiles (source="hist"; each within
+    # arrivals.HIST_REL_ERROR of the exact value), the exact max, the
+    # recorded count, and the deadline-missed count per cell.
+    p50: np.ndarray | None = None
+    p90: np.ndarray | None = None
+    p99: np.ndarray | None = None
+    lat_max: np.ndarray | None = None
+    lat_count: np.ndarray | None = None
+    missed: np.ndarray | None = None
 
     def result(self, li: int, ci: int) -> SimResult:
         """One cell as a :class:`SimResult` (no per-op latency columns --
         use the loop backends for those)."""
+        summary = None
+        missed = 0
+        if self.p50 is not None:
+            missed = int(self.missed[li, ci])
+            summary = LatencySummary(
+                count=int(self.lat_count[li, ci]),
+                p50=float(self.p50[li, ci]),
+                p90=float(self.p90[li, ci]),
+                p99=float(self.p99[li, ci]),
+                max=float(self.lat_max[li, ci]),
+                missed=missed,
+                source="hist",
+            )
         return SimResult(
             ops=self.ops,
             time=float(self.time[li, ci]),
             throughput=float(self.throughput[li, ci]),
             mem_stall_total=float(self.mem_stall_total[li, ci]),
             mem_accesses=int(self.mem_accesses[li, ci]),
+            missed_ops=missed,
+            latency_summary=summary,
         )
 
 
@@ -264,11 +290,11 @@ _RNG_CHUNK = 1024   # steps per generated uniform block (memory/dispatch knob)
 
 
 def _grid_body(kinds, durs, op_starts, op_ends, n_trace,
-               L_mem_g, nthr_g, warm_g, n_ops, dyn, key, stream_ids, *,
+               L_mem_g, nthr_g, warm_g, n_ops, dyn, key, stream_ids, arr, *,
                T_max, P, n_ssd, steps, unroll, substeps, use_pallas,
                early_exit, n_cores,
                has_eps, has_rho, has_jitter, has_rio, has_bio, has_bmem,
-               has_lock):
+               has_lock, has_arr=False, has_lat=False, has_deadline=False):
     """The (unjitted) grid program; ``_run_grid`` jits it, the host-device
     sharding path wraps it in ``shard_map`` over the cell axis first."""
     from repro.kernels import sched_step as sk
@@ -328,6 +354,19 @@ def _grid_body(kinds, durs, op_starts, op_ends, n_trace,
         lambda t: jax.random.uniform(jax.random.fold_in(k, 2 + t), (2,),
                                      dtype=f))(tids))(cell_keys)  # (G, CT, 2)
     pf0 = u_thread[:, :, 0] * lmem(u_thread[:, :, 1], L_mem_g[:, None])
+    if has_arr:
+        # Open loop: thread ``rank`` takes arrival index ``rank`` (the
+        # loops' cid-major init order); its first prefetch is anchored at
+        # the arrival, and a future arrival parks the thread on the wake
+        # plane -- wake keys tie-break toward the lower tid, the loops'
+        # heap-push order.  Inactive padding slots read a clamped arrival
+        # but never run.
+        arr0 = arr[jnp.minimum(rank, arr.shape[0] - 1)]          # (G, CT)
+        pf0 = pf0 + arr0
+        parked0 = active & (arr0 > 0.0)
+    else:
+        arr0 = None
+        parked0 = jnp.zeros_like(active)
 
     # Initial state, in the sched_step layout: active threads populate the
     # ready ring in tid order (join stamps sit an EPOCH apart just above
@@ -339,17 +378,23 @@ def _grid_body(kinds, durs, op_starts, op_ends, n_trace,
     tids_gt = jnp.broadcast_to(tids[None, :], (G, CT))
     slots_p = jnp.arange(P, dtype=i4)[None, :]
     pf_shape = (G, n_cores, P) if multicore else (G, P)
+    ci_cols = [cursor_init, jnp.zeros(G, i4), jnp.zeros(G, i4),
+               jnp.zeros(G, i4), jnp.zeros(G, i4),
+               (warm_g <= 0).astype(i4)]
+    if has_lat:
+        ci_cols.append(jnp.zeros(G, i4))           # missed-op counter
+    pft_cols = [pf0, span0]
+    if has_lat:
+        pft_cols.append(arr0 if has_arr else jnp.zeros((G, CT), f))
     state = (
         jnp.zeros((G, 6), f).at[:, 3].set(-1.0),
-        jnp.stack(
-            [cursor_init, jnp.zeros(G, i4), jnp.zeros(G, i4),
-             jnp.zeros(G, i4), jnp.zeros(G, i4),
-             (warm_g <= 0).astype(i4)], axis=1),
-        jnp.where(active,
+        jnp.stack(ci_cols, axis=1),
+        jnp.where(active & ~parked0,
                   sk.tag_encode(tids_gt.astype(f) * sk.EPOCH, tids_gt),
                   sk.BIG),
-        jnp.full((G, CT), jnp.inf, f),
-        jnp.stack([pf0, span0], axis=2),
+        (jnp.where(parked0, arr0, jnp.inf) if has_arr
+         else jnp.full((G, CT), jnp.inf, f)),
+        jnp.stack(pft_cols, axis=2),
         jnp.broadcast_to((slots_p.astype(f) * sk.EPOCH)
                          .reshape((1,) * (len(pf_shape) - 1) + (P,)),
                          pf_shape),
@@ -358,21 +403,25 @@ def _grid_body(kinds, durs, op_starts, op_ends, n_trace,
         state = state + (jnp.zeros((G, n_cores, 2), f),)
     if has_io_clock:
         state = state + (jnp.zeros((G, n_ssd), f), jnp.zeros((G, n_ssd), f))
+    if has_lat:
+        state = state + (jnp.zeros((G, HIST_BINS), f), jnp.zeros((G,), f))
 
     sub = sk.make_substep(
         n_u=n_u, n_ssd=n_ssd, has_eps=has_eps, has_rho=has_rho,
         has_jitter=has_jitter, has_rio=has_rio, has_bio=has_bio,
-        has_bmem=has_bmem, has_lock=has_lock,
+        has_bmem=has_bmem, has_lock=has_lock, has_arr=has_arr,
+        has_lat=has_lat, has_deadline=has_deadline,
         onehot_updates=use_pallas, eager_wmin=use_pallas, n_cores=n_cores)
 
     if use_pallas:
         def block(s, ub):
-            return sk.fused_steps(sub, s, ub, kd, se, n_trace, L_mem_g,
-                                  warm_g, n_ops, dyn), None
+            return sk.fused_steps(sub, s, ub, kd, se, arr, n_trace,
+                                  L_mem_g, nthr_g, warm_g, n_ops,
+                                  dyn), None
     else:
         def step(s, u):
-            return sub(s, u, kd, se, n_trace, L_mem_g, warm_g, n_ops,
-                       dyn), None
+            return sub(s, u, kd, se, arr, nthr_g, n_trace, L_mem_g,
+                       warm_g, n_ops, dyn), None
 
     def chunk(s, ck):
         if n_u:
@@ -413,7 +462,7 @@ def _grid_body(kinds, durs, op_starts, op_ends, n_trace,
         ck_end = jnp.int32(n_chunks)
     cf, ci = state[0], state[1]
     elapsed = jnp.maximum(cf[:, 4] - cf[:, 3], 1e-12)
-    return dict(
+    out = dict(
         throughput=n_ops / elapsed,
         time=elapsed,
         mem_stall_total=cf[:, 5],
@@ -423,13 +472,18 @@ def _grid_body(kinds, durs, op_starts, op_ends, n_trace,
         # early-exit point (shards stop independently, no collectives).
         steps_run=jnp.broadcast_to(ck_end * _RNG_CHUNK, (G,)),
     )
+    if has_lat:
+        out["lat_hist"] = state[-2]
+        out["lat_max"] = state[-1]
+        out["missed"] = ci[:, 6]
+    return out
 
 
 _STATIC_GRID_ARGS = (
     "T_max", "P", "n_ssd", "steps", "unroll", "substeps", "use_pallas",
     "early_exit", "n_cores",
     "has_eps", "has_rho", "has_jitter", "has_rio", "has_bio", "has_bmem",
-    "has_lock")
+    "has_lock", "has_arr", "has_lat", "has_deadline")
 
 _run_grid = partial(jax.jit, static_argnames=_STATIC_GRID_ARGS)(_grid_body)
 
@@ -454,7 +508,8 @@ def _run_grid_sharded(n_dev: int, **static):
         partial(_grid_body, **static), mesh,
         in_specs=(repl, repl, repl, repl, repl,      # trace columns, n_trace
                   cells, cells, cells,               # L_mem_g, nthr_g, warm_g
-                  repl, repl, repl, cells),          # n_ops, dyn, key, streams
+                  repl, repl, repl, cells,           # n_ops, dyn, key, streams
+                  repl),                             # arrival timestamps
         out_specs=cells,
         # the early-exit while_loop has no replication rule; every output
         # is cell-sharded anyway, so the rep check buys nothing here
@@ -520,6 +575,9 @@ def sweep_grid(
     bucket_threads: bool = True,
     early_exit: bool = True,
     host_devices: int | None = None,
+    arrivals: Sequence[float] | None = None,
+    collect_percentiles: bool = False,
+    deadline: float = 0.0,
 ) -> GridResult:
     """Run the full ``latencies x thread_candidates`` grid in one compiled
     call per cohort; see the module docstring for semantics and exactness.
@@ -545,6 +603,17 @@ def sweep_grid(
     ``--xla_force_host_platform_device_count`` -- *before* jax
     initializes); shards early-exit independently.  Incompatible with
     ``use_pallas`` (the interpreted kernel cannot run under shard_map).
+
+    ``arrivals`` (a monotone timestamp sequence, seconds -- see
+    :func:`repro.core.sim.arrivals.generate_arrivals`) switches every
+    cell to the open-loop driver: the SAME array drives all cells (each
+    consumes its own prefix), so it must cover the worst cell's demand
+    ``n_cores * n_threads + warmup + n_ops``.  ``collect_percentiles``
+    accumulates measured sojourns into a per-cell log-histogram (error
+    bound ``arrivals.HIST_REL_ERROR`` per percentile; the max is exact)
+    and fills the ``GridResult`` tail planes; ``deadline`` (seconds,
+    0 = off) counts sojourns above it as missed instead of recording
+    them.
     """
     if cfg.n_cores < 1:
         raise ValueError(f"n_cores must be >= 1, got {cfg.n_cores}")
@@ -601,6 +670,27 @@ def sweep_grid(
                 "--xla_force_host_platform_device_count) before jax "
                 "initializes")
 
+    has_arr = arrivals is not None
+    has_lat = bool(collect_percentiles)
+    has_deadline = has_lat and deadline > 0.0
+    if deadline < 0.0:
+        raise ValueError(f"deadline must be >= 0, got {deadline}")
+    arr_np = np.zeros(1, dtype=np.float64)
+    if has_arr:
+        arr_np = np.asarray(arrivals, dtype=np.float64)
+        if arr_np.ndim != 1 or arr_np.size == 0:
+            raise ValueError("arrivals must be a non-empty 1-D sequence")
+        need = max(
+            cfg.n_cores * c
+            + (warmup_ops if warmup_ops is not None else 2 * c * cfg.n_cores)
+            + n_ops
+            for c in candidates)
+        if arr_np.size < need:
+            raise ValueError(
+                f"arrivals has {arr_np.size} timestamps but the widest "
+                f"cell consumes up to {need} "
+                "(n_cores * n_threads + warmup + n_ops)")
+
     dyn = (
         cfg.T_sw, cfg.eps, cfg.rho, cfg.L_dram, cfg.L_io, cfg.L_io_jitter,
         1.0 / cfg.R_io if cfg.R_io > 0.0 else 0.0,
@@ -608,6 +698,7 @@ def sweep_grid(
         cfg.L_switch,
         cfg.A_mem / cfg.B_mem if cfg.B_mem > 0.0 else 0.0,
         cfg.T_lock,
+        deadline,
     )
     cohorts = _cohorts(source, candidates, n_ops, warmup_ops, cfg.n_cores,
                        bucket_threads)
@@ -617,6 +708,13 @@ def sweep_grid(
     tim = np.empty(shape)
     stall = np.empty(shape)
     macc = np.empty(shape, dtype=np.int64)
+    if has_lat:
+        p50 = np.empty(shape)
+        p90 = np.empty(shape)
+        p99 = np.empty(shape)
+        lmax = np.empty(shape)
+        lcount = np.empty(shape, dtype=np.int64)
+        lmiss = np.empty(shape, dtype=np.int64)
     max_steps = 0
     steps_bound_cells = 0
     steps_run_cells = 0
@@ -654,7 +752,8 @@ def sweep_grid(
                 T_max=T_max, P=cfg.P, n_ssd=cfg.n_ssd, steps=steps,
                 unroll=unroll, substeps=substeps if use_pallas else 0,
                 use_pallas=use_pallas, early_exit=early_exit,
-                n_cores=cfg.n_cores, **_make_flags(cfg),
+                n_cores=cfg.n_cores, has_arr=has_arr, has_lat=has_lat,
+                has_deadline=has_deadline, **_make_flags(cfg),
             )
             run = (_run_grid_sharded(n_dev, **static) if n_dev > 1
                    else partial(_run_grid, **static))
@@ -667,6 +766,7 @@ def sweep_grid(
                 tuple(jnp.float64(d) for d in dyn),
                 jax.random.PRNGKey(cfg.seed),
                 jnp.asarray(stream_ids),
+                jnp.asarray(arr_np),
             )
             out = {k: np.asarray(v)[:G] for k, v in out.items()}
             if not np.all(out["counted"] >= n_ops):
@@ -682,6 +782,24 @@ def sweep_grid(
             tim[:, cols] = out["time"].reshape(bshape)
             stall[:, cols] = out["mem_stall_total"].reshape(bshape)
             macc[:, cols] = out["mem_accesses"].reshape(bshape)
+            if has_lat:
+                # Host-side percentile reduction, vectorized over cells:
+                # nearest-rank on the cumulative counts, exactly
+                # arrivals.summarize_hist per row.
+                cum = np.cumsum(out["lat_hist"], axis=1)
+                total = np.rint(cum[:, -1]).astype(np.int64)
+                empty = total == 0
+                for q, dest in ((0.5, p50), (0.9, p90), (0.99, p99)):
+                    rank = np.ceil(q * np.maximum(total, 1))
+                    b = np.minimum((cum < rank[:, None]).sum(axis=1),
+                                   HIST_BINS - 1)
+                    dest[:, cols] = np.where(
+                        empty, np.nan, hist_bin_value(b)).reshape(bshape)
+                lmax[:, cols] = np.where(
+                    empty, np.nan, out["lat_max"]).reshape(bshape)
+                lcount[:, cols] = total.reshape(bshape)
+                lmiss[:, cols] = out["missed"].astype(
+                    np.int64).reshape(bshape)
     return GridResult(
         throughput=thr,
         time=tim,
@@ -691,4 +809,10 @@ def sweep_grid(
         steps=max_steps,
         cell_steps_bound=steps_bound_cells,
         cell_steps_run=steps_run_cells,
+        p50=p50 if has_lat else None,
+        p90=p90 if has_lat else None,
+        p99=p99 if has_lat else None,
+        lat_max=lmax if has_lat else None,
+        lat_count=lcount if has_lat else None,
+        missed=lmiss if has_lat else None,
     )

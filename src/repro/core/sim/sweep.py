@@ -32,6 +32,7 @@ from dataclasses import dataclass, replace
 from typing import Callable, Iterable, Sequence
 
 from ..trace_ir import CompiledTrace, Op
+from .arrivals import ArrivalSpec, LatencySummary, generate_arrivals
 from .config import DEFAULT_THREAD_CANDIDATES, SimConfig, SimResult
 from .engine_loop import simulate, simulate_compiled
 
@@ -79,11 +80,15 @@ def _coerce_trace(source) -> tuple[CompiledTrace | None, Callable | None]:
 
 def _run_cell(cfg: SimConfig, trace, src_fn, n_ops: int,
               warmup_ops: int | None,
-              collect_latency: bool = False) -> SimResult:
+              collect_latency: bool = False,
+              arrivals=None, collect_percentiles: bool = False,
+              deadline: float = 0.0) -> SimResult:
+    kw = dict(arrivals=arrivals, collect_percentiles=collect_percentiles,
+              deadline=deadline)
     if trace is not None:
         return simulate_compiled(cfg, trace, n_ops, warmup_ops,
-                                 collect_latency)
-    return simulate(cfg, src_fn, n_ops, warmup_ops, collect_latency)
+                                 collect_latency, **kw)
+    return simulate(cfg, src_fn, n_ops, warmup_ops, collect_latency, **kw)
 
 
 # -- worker-process plumbing -------------------------------------------------
@@ -91,16 +96,17 @@ def _run_cell(cfg: SimConfig, trace, src_fn, n_ops: int,
 _WORKER_STATE: dict = {}
 
 
-def _worker_init(trace, src_fn, n_ops, warmup_ops, collect_latency):
+def _worker_init(trace, src_fn, n_ops, warmup_ops, collect_latency,
+                 arrivals=None, collect_percentiles=False, deadline=0.0):
     _WORKER_STATE["args"] = (trace, src_fn, n_ops, warmup_ops,
-                             collect_latency)
+                             collect_latency, arrivals,
+                             collect_percentiles, deadline)
     if trace is not None:
         trace.as_lists()   # pay the one-time columnar->list cost per worker
 
 
 def _worker_run(cfg: SimConfig) -> SimResult:
-    trace, src_fn, n_ops, warmup_ops, collect_latency = _WORKER_STATE["args"]
-    return _run_cell(cfg, trace, src_fn, n_ops, warmup_ops, collect_latency)
+    return _run_cell(cfg, *_WORKER_STATE["args"])
 
 
 def _pick_context(trace, src_fn):
@@ -131,7 +137,8 @@ def _pick_context(trace, src_fn):
 
 def _run_jax_cells(cfg: SimConfig, trace: CompiledTrace, latencies,
                    candidates, n_ops, warmup_ops, results, todo,
-                   jax_opts=None) -> None:
+                   jax_opts=None, arrivals=None,
+                   collect_percentiles=False, deadline=0.0) -> None:
     """Fill ``results[i]`` for every grid index in ``todo`` via the jax
     backend.  All missing scalar-latency cells run as one vectorized grid
     call (:func:`repro.core.sim.replay_jax.sweep_grid`); mixture-latency
@@ -152,7 +159,9 @@ def _run_jax_cells(cfg: SimConfig, trace: CompiledTrace, latencies,
     if need_lis:
         grid = replay_jax.sweep_grid(
             cfg, trace, [latencies[li] for li in need_lis], candidates,
-            n_ops, warmup_ops, **(jax_opts or {}))
+            n_ops, warmup_ops, arrivals=arrivals,
+            collect_percentiles=collect_percentiles, deadline=deadline,
+            **(jax_opts or {}))
     row_of = {li: r for r, li in enumerate(need_lis)}
     for i in todo:
         li, ci = divmod(i, k)
@@ -161,7 +170,8 @@ def _run_jax_cells(cfg: SimConfig, trace: CompiledTrace, latencies,
         else:
             results[i] = simulate_compiled(
                 replace(cfg, L_mem=latencies[li], n_threads=candidates[ci]),
-                trace, n_ops, warmup_ops)
+                trace, n_ops, warmup_ops, arrivals=arrivals,
+                collect_percentiles=collect_percentiles, deadline=deadline)
 
 
 # -- on-disk cell cache ------------------------------------------------------
@@ -169,16 +179,26 @@ def _run_jax_cells(cfg: SimConfig, trace: CompiledTrace, latencies,
 # op_latencies / load_stalls are deliberately NOT cached (they are large and
 # rarely wanted); any call that needs them must bypass the cache entirely --
 # otherwise a cache hit would silently return mean_op_latency == 0 where a
-# cold run would not (see sweep_latency's ``use_cache`` predicate).
+# cold run would not (see sweep_latency's ``use_cache`` predicate).  The
+# percentile *summary* (a handful of floats) IS cached, so
+# ``collect_percentiles`` sweeps stay incremental: a cell cached without a
+# summary simply misses when a summary is requested (``need_summary``) and
+# is recomputed and overwritten in place.
 _CACHED_FIELDS = ("ops", "time", "throughput", "mem_stall_total",
-                  "mem_accesses")
+                  "mem_accesses", "missed_ops")
+
+# Bumped whenever the cell-file layout changes (v2: missed_ops +
+# latency_summary).  Folded into every key, so a schema change simply
+# orphans the old cells -- they age out via prune_sweep_cache instead of
+# being misread (eviction-safe, no in-place migration).
+_CACHE_SCHEMA = 2
 
 # Source files whose semantics define what a cached cell means.  Their
 # digest is folded into every cell key, so cells from an older revision of
 # the simulator can never be served as current results (previously stale
 # cells silently survived code changes).
-_SALT_FILES = ("config.py", "devices.py", "engine_loop.py", "scheduler.py",
-               "sweep.py", "replay_jax.py")
+_SALT_FILES = ("arrivals.py", "config.py", "devices.py", "engine_loop.py",
+               "scheduler.py", "sweep.py", "replay_jax.py")
 _CODE_SALT: str | None = None
 
 
@@ -206,11 +226,17 @@ def _code_salt() -> str:
 
 
 def _cache_key(cfg: SimConfig, trace_digest: str, n_ops: int,
-               warmup_ops, backend: str) -> str:
+               warmup_ops, backend: str, arrival_key: str | None = None) -> str:
     # The backend is part of the key: loop and jax cells agree only within
     # tolerance, so a cached cell must never answer for the other backend.
+    # The arrival spec is part of the key too (it changes every cell
+    # value); the shared arrival array itself is NOT -- each cell consumes
+    # a deterministic prefix that depends only on the spec and the cell's
+    # own (n_threads, warmup, n_ops), so cells stay pure across sweeps
+    # with different candidate lists.
     blob = json.dumps(
-        [repr(cfg), trace_digest, n_ops, warmup_ops, backend, _code_salt()],
+        [_CACHE_SCHEMA, repr(cfg), trace_digest, n_ops, warmup_ops, backend,
+         arrival_key, _code_salt()],
         sort_keys=True,
     ).encode()
     return hashlib.sha1(blob).hexdigest()
@@ -318,12 +344,21 @@ def prune_sweep_cache(
     return removed
 
 
-def _cache_load(path: str) -> SimResult | None:
+def _cache_load(path: str, need_summary: bool = False) -> SimResult | None:
     try:
         with open(path) as f:
             d = json.load(f)
-        r = SimResult(**{k: d[k] for k in _CACHED_FIELDS})
-    except (OSError, ValueError, KeyError, TypeError):
+        summary = d.get("latency_summary")
+        if need_summary and summary is None:
+            # Cached before percentiles were requested: a miss, not an
+            # error -- the recompute overwrites the cell with its summary.
+            return None
+        r = SimResult(
+            **{k: d[k] for k in _CACHED_FIELDS},
+            latency_summary=(LatencySummary.from_dict(summary)
+                             if summary is not None else None))
+    except (OSError, ValueError, KeyError, TypeError, AttributeError):
+        # corrupt/foreign cells (non-JSON, wrong shape) are misses
         return None
     try:
         os.utime(path)   # mtime is the LRU clock for prune_sweep_cache
@@ -334,9 +369,12 @@ def _cache_load(path: str) -> SimResult | None:
 
 def _cache_store(path: str, r: SimResult) -> None:
     tmp = f"{path}.tmp.{os.getpid()}"
+    doc = {k: getattr(r, k) for k in _CACHED_FIELDS}
+    doc["latency_summary"] = (r.latency_summary.to_dict()
+                              if r.latency_summary is not None else None)
     try:
         with open(tmp, "w") as f:
-            json.dump({k: getattr(r, k) for k in _CACHED_FIELDS}, f)
+            json.dump(doc, f)
         os.replace(tmp, path)
     except OSError:
         pass
@@ -372,6 +410,8 @@ def sweep_latency(
     unroll: int | None = None,
     substeps: int | None = None,
     host_devices: int | None = None,
+    arrival: ArrivalSpec | dict | None = None,
+    collect_percentiles: bool = False,
 ) -> list[SweepPoint]:
     """Throughput vs. memory latency with per-point thread optimization.
 
@@ -402,12 +442,16 @@ def sweep_latency(
         available or the source cannot cross a process boundary).
     cache_dir
         If set, finished cells are memoized as small JSON files keyed by
-        (config, trace digest, n_ops); repeated sweeps only simulate new
-        cells.  Histogram/latency collection is never cached: a
+        (config, trace digest, n_ops, arrival spec); repeated sweeps only
+        simulate new cells.  Bulk per-op collection is never cached: a
         ``collect_latency=True`` (or ``cfg.collect_load_hist``) call
         bypasses the cache entirely -- loads *and* stores -- because the
         cached cells drop ``op_latencies``/``load_stalls`` and a cache hit
-        would silently return ``mean_op_latency == 0``.
+        would silently return ``mean_op_latency == 0``.  The compact
+        percentile summary IS cached: ``collect_percentiles`` sweeps hit
+        the cache, and a cell cached without its summary is transparently
+        recomputed (and upgraded) the first time percentiles are asked of
+        it.
     collect_latency
         Record per-op latencies in every cell (``SimResult.op_latencies``),
         e.g. for Fig. 17-style latency curves.  Disables the cell cache.
@@ -446,6 +490,19 @@ def sweep_latency(
         keeps ``sweep_grid``'s default.  Strategy knobs only -- cell
         values (and hence cache keys) do not depend on them; ignored by
         ``backend="loop"``.
+    arrival
+        An :class:`~repro.core.sim.arrivals.ArrivalSpec` (or its dict
+        form) switching every cell to the open-loop driver: one shared
+        deterministic timestamp stream (seconds; sized to the widest
+        cell's demand) drives all cells and backends, ops wait for their
+        arrival, and the spec's ``deadline`` classifies late sojourns as
+        missed.  ``None`` (default) keeps the closed-loop driver.
+    collect_percentiles
+        Summarize each cell's measured sojourn latencies into
+        ``SimResult.latency_summary`` (p50/p90/p99/max + missed count):
+        exact nearest-rank on the loop backends, log-histogram on the jax
+        backend (within ``arrivals.HIST_REL_ERROR``).  Cache-friendly,
+        unlike ``collect_latency``.
 
     Returns one :class:`SweepPoint` per latency, in input order.
     """
@@ -471,6 +528,25 @@ def sweep_latency(
                 "backend='jax' replays compiled traces; pass a "
                 "CompiledTrace / TraceResult / list[Op], not a callable")
 
+    arrival_spec: ArrivalSpec | None = None
+    if arrival is not None:
+        arrival_spec = (arrival if isinstance(arrival, ArrivalSpec)
+                        else ArrivalSpec.from_dict(arrival))
+    deadline = arrival_spec.deadline if arrival_spec is not None else 0.0
+    arrivals_arr = None
+    if arrival_spec is not None:
+        # One shared stream sized to the widest cell's demand
+        # (init threads + warmup + measured ops); every cell consumes its
+        # own prefix, so the stream length never changes cell values.
+        need = max(
+            cfg.n_cores * c
+            + (warmup_ops if warmup_ops is not None
+               else 2 * c * cfg.n_cores)
+            + n_ops
+            for c in candidates) + 1
+        arrivals_arr = generate_arrivals(arrival_spec, need)
+    arrival_key = arrival_spec.key() if arrival_spec is not None else None
+
     use_cache = (cache_dir is not None and trace is not None
                  and not cfg.collect_load_hist and not collect_latency)
     digest = ""
@@ -484,12 +560,14 @@ def sweep_latency(
     def cell_path(c: SimConfig) -> str:
         return os.path.join(
             str(cache_dir),
-            _cache_key(c, digest, n_ops, warmup_ops, backend) + ".json")
+            _cache_key(c, digest, n_ops, warmup_ops, backend,
+                       arrival_key) + ".json")
 
     if adaptive:
         return _sweep_adaptive(cfg, trace, src_fn, latencies, candidates,
                                n_ops, warmup_ops, collect_latency,
-                               use_cache, cell_path)
+                               use_cache, cell_path, arrivals_arr,
+                               collect_percentiles, deadline)
 
     grid_cfgs = [
         replace(cfg, L_mem=L, n_threads=n)
@@ -503,7 +581,8 @@ def sweep_latency(
     if use_cache:
         for i, c in enumerate(grid_cfgs):
             paths[i] = cell_path(c)
-            results[i] = _cache_load(paths[i])
+            results[i] = _cache_load(paths[i],
+                                     need_summary=collect_percentiles)
 
     todo = [i for i, r in enumerate(results) if r is None]
 
@@ -517,7 +596,8 @@ def sweep_latency(
         if host_devices is not None:
             jax_opts["host_devices"] = host_devices
         _run_jax_cells(cfg, trace, latencies, candidates, n_ops,
-                       warmup_ops, results, todo, jax_opts)
+                       warmup_ops, results, todo, jax_opts,
+                       arrivals_arr, collect_percentiles, deadline)
         if use_cache:
             for i in todo:
                 _cache_store(paths[i], results[i])
@@ -534,7 +614,8 @@ def sweep_latency(
             with ctx.Pool(
                 min(processes, len(todo)),
                 initializer=_worker_init,
-                initargs=(trace, src_fn, n_ops, warmup_ops, collect_latency),
+                initargs=(trace, src_fn, n_ops, warmup_ops, collect_latency,
+                          arrivals_arr, collect_percentiles, deadline),
                 maxtasksperchild=1 if src_fn is not None else None,
             ) as pool:
                 for i, r in zip(todo,
@@ -545,7 +626,9 @@ def sweep_latency(
         else:
             for i in todo:
                 results[i] = _run_cell(grid_cfgs[i], trace, src_fn, n_ops,
-                                       warmup_ops, collect_latency)
+                                       warmup_ops, collect_latency,
+                                       arrivals_arr, collect_percentiles,
+                                       deadline)
         if use_cache:
             for i in todo:
                 _cache_store(paths[i], results[i])
@@ -561,7 +644,8 @@ def sweep_latency(
 
 def _sweep_adaptive(cfg, trace, src_fn, latencies, candidates, n_ops,
                     warmup_ops, collect_latency, use_cache,
-                    cell_path) -> list[SweepPoint]:
+                    cell_path, arrivals=None, collect_percentiles=False,
+                    deadline=0.0) -> list[SweepPoint]:
     """Warm-started hill search over the candidate list, one point at a time.
 
     Invariant per latency point: the evaluated window ``[lo, hi]`` always
@@ -573,10 +657,11 @@ def _sweep_adaptive(cfg, trace, src_fn, latencies, candidates, n_ops,
     def eval_cell(c: SimConfig) -> SimResult:
         if use_cache:
             path = cell_path(c)
-            r = _cache_load(path)
+            r = _cache_load(path, need_summary=collect_percentiles)
             if r is not None:
                 return r
-        r = _run_cell(c, trace, src_fn, n_ops, warmup_ops, collect_latency)
+        r = _run_cell(c, trace, src_fn, n_ops, warmup_ops, collect_latency,
+                      arrivals, collect_percentiles, deadline)
         if use_cache:
             _cache_store(path, r)
         return r

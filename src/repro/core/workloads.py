@@ -21,6 +21,7 @@ __all__ = [
     "Workload",
     "uniform",
     "zipf",
+    "drifting_zipf",
     "gaussian",
     "graph_cache_leader",
     "register_workload",
@@ -133,6 +134,45 @@ def zipf(
     keys = (draws.astype(np.uint64) * np.uint64(2654435761)) % np.uint64(n_keys)
     return Workload(
         f"zipf{exponent}", keys.astype(np.int64), _mix(n_ops, read_write, rng), n_keys
+    )
+
+
+@register_workload("drifting-zipf", "zipf-drift")
+def drifting_zipf(
+    n_keys: int, n_ops: int, exponent0: float = 0.6, exponent1: float = 1.2,
+    n_segments: int = 16, read_write=(1, 0), seed: int = 0
+) -> Workload:
+    """Zipf whose skew drifts linearly from ``exponent0`` to ``exponent1``
+    across the op stream -- the open-loop companion to the time-varying
+    arrival processes in :mod:`repro.core.sim.arrivals` (a store warming up
+    or a cache whose working set concentrates over a diurnal cycle).
+
+    The stream is cut into ``n_segments`` equal slices; slice ``i`` draws
+    from a bounded Zipf at the segment-midpoint exponent, so the drift is
+    piecewise-constant but deterministic in ``(n_keys, n_ops, seed)``.
+    Ranks use the same permutation hash as :func:`zipf`, so the *identity*
+    of the hot keys is stable while their concentration drifts.
+    """
+    if n_segments < 1:
+        raise ValueError(f"n_segments must be >= 1, got {n_segments}")
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    u = rng.random(n_ops)
+    bounds = np.linspace(0, n_ops, n_segments + 1).astype(np.int64)
+    draws = np.empty(n_ops, dtype=np.int64)
+    for i in range(n_segments):
+        lo, hi = bounds[i], bounds[i + 1]
+        if hi <= lo:
+            continue
+        frac = (i + 0.5) / n_segments
+        e = exponent0 + (exponent1 - exponent0) * frac
+        cdf = np.cumsum(ranks ** (-e))
+        cdf /= cdf[-1]
+        draws[lo:hi] = np.searchsorted(cdf, u[lo:hi])
+    keys = (draws.astype(np.uint64) * np.uint64(2654435761)) % np.uint64(n_keys)
+    return Workload(
+        f"drifting_zipf{exponent0}-{exponent1}", keys.astype(np.int64),
+        _mix(n_ops, read_write, rng), n_keys
     )
 
 

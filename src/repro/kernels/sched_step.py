@@ -94,6 +94,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.sim.arrivals import HIST_BINS, HIST_INV_LN_RATIO, HIST_LO
 from ..core.trace_ir import MEM, PREIO
 
 __all__ = [
@@ -160,16 +161,33 @@ def unpack_span(span):
 
 
 def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
-                 has_bio, has_bmem, has_lock, onehot_updates=False,
+                 has_bio, has_bmem, has_lock, has_arr=False, has_lat=False,
+                 has_deadline=False, onehot_updates=False,
                  eager_wmin=False, n_cores=1):
     """Build the scheduler substep body, specialized on the static config.
 
-    The returned ``substep(state, u, kd, se, n_trace, L_mem_g, warm_g,
-    n_ops, dyn) -> state`` advances every cell by one suboperation
-    execution.  ``state`` is the tuple documented in the module docstring
-    (``io_tok``/``io_bw`` present only when an IO clock is configured);
-    ``u`` is the ``(n_u, G)`` uniform block for this step; ``kd``/``se``
-    are the packed trace columns; ``dyn`` the tuple of dynamic scalars.
+    The returned ``substep(state, u, kd, se, arr, nthr_g, n_trace,
+    L_mem_g, warm_g, n_ops, dyn) -> state`` advances every cell by one
+    suboperation execution.  ``state`` is the tuple documented in the
+    module docstring (``io_tok``/``io_bw`` present only when an IO clock
+    is configured); ``u`` is the ``(n_u, G)`` uniform block for this step;
+    ``kd``/``se`` are the packed trace columns; ``arr`` the shared
+    open-loop arrival timestamp vector (a 1-wide dummy when ``has_arr``
+    is off); ``nthr_g`` the per-cell thread counts (int32, read only when
+    ``has_arr``); ``dyn`` the tuple of dynamic scalars (deadline last).
+
+    ``has_arr`` replays the loops' open-loop driver: op completions fetch
+    the next arrival at the shared index ``n_cores * nthr_g + done``
+    (clamped to the last entry), stamp it as the new op's start, gate the
+    next prefetch issue at ``max(now, arrival)``, and park the thread on
+    the wake plane until the arrival clock when it is still in the
+    future.  ``has_lat`` widens ``pft`` with an op-start slot, widens
+    ``ci`` with a missed-op counter, and appends two state planes --
+    ``hist`` (G, HIST_BINS) f64 sojourn log-histogram counts and
+    ``latmax`` (G,) f64 exact max sojourn (see
+    :mod:`repro.core.sim.arrivals` for the binning and its error bound).
+    ``has_deadline`` additionally classifies measured sojourns above
+    ``dyn``'s deadline as missed (counted, excluded from the histogram).
 
     ``onehot_updates`` switches the per-row thread-plane gathers/scatters
     to bit-identical one-hot select/merge forms (the Pallas kernel's
@@ -222,18 +240,21 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
         rows = jnp.arange(plane.shape[0], dtype=i4)
         return plane.at[rows, tid].set(val)
 
-    def substep(s, u, kd, se, n_trace, L_mem_g, warm_g, n_ops, dyn):
+    def substep(s, u, kd, se, arr, nthr_g, n_trace, L_mem_g, warm_g,
+                n_ops, dyn):
         (T_sw, eps, rho, L_dram, L_io, jitter, inv_R, cost_bw_io, L_switch,
-         cost_bmem, T_lock) = dyn
+         cost_bmem, T_lock, deadline) = dyn
+        cf, ci, stamp, wake, pft, pf_slots = s[:6]
+        si = 6
         if multicore:
-            if has_io_clock:
-                cf, ci, stamp, wake, pft, pf_slots, cores, io_tok, io_bw = s
-            else:
-                cf, ci, stamp, wake, pft, pf_slots, cores = s
-        elif has_io_clock:
-            cf, ci, stamp, wake, pft, pf_slots, io_tok, io_bw = s
-        else:
-            cf, ci, stamp, wake, pft, pf_slots = s
+            cores = s[si]
+            si += 1
+        if has_io_clock:
+            io_tok, io_bw = s[si], s[si + 1]
+            si += 2
+        if has_lat:
+            lat_hist, latmax = s[si], s[si + 1]
+            si += 2
         G, T = stamp.shape
         un = iter(range(n_u))
 
@@ -356,8 +377,9 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
         # of the untouched ring instead of appending it at the tail.
         ticket = tag_encode(jnp.maximum(now, T * EPOCH), tid)
 
-        pft_r = sel_thread(pft, tid)                 # (G, 2)
+        pft_r = sel_thread(pft, tid)                 # (G, 2) or (G, 3)
         pf_tid0 = pft_r[:, 0]
+        op_start_r = pft_r[:, 2] if has_lat else None
         i_f, end_f = unpack_span(pft_r[:, 1])
         kd_i = kd[i_f.astype(i4)]                    # (G, 2)
         kind = kd_i[:, 0]
@@ -386,6 +408,40 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
         measuring = jnp.maximum(ci[:, 5], meas_evt)
         counted = counted0 + meas_evt
         t_start = jnp.where(meas_evt & (cf[:, 3] < 0.0), now, cf[:, 3])
+        if has_arr:
+            # The next op's arrival: the loops consume one shared index
+            # per issue -- n_cores * n_threads at init, then one per
+            # completion -- so completion k (pre-increment ``done``) reads
+            # index total_threads + ci[:, 2].  Clamped to the last entry,
+            # matching the loops' guard (only reachable after the cell
+            # latched, where nothing observable depends on it).
+            arr_next = arr[jnp.minimum(
+                n_cores * nthr_g + ci[:, 2], arr.shape[0] - 1)]
+        if has_lat:
+            # Sojourn at the pre-T_lock completion instant, mirroring the
+            # loops (collection happens before the lock charge there).
+            sojourn = now - op_start_r
+            if has_deadline:
+                is_miss = sojourn > deadline
+            else:
+                is_miss = jnp.zeros_like(eoo)
+            rec = meas_evt & ~is_miss
+            missed = ci[:, 6] + (meas_evt & is_miss)
+            b = jnp.clip(
+                jnp.floor(jnp.log(jnp.maximum(sojourn, HIST_LO) / HIST_LO)
+                          * HIST_INV_LN_RATIO),
+                0, HIST_BINS - 1).astype(i4)
+            inc = jnp.where(rec, 1.0, 0.0)
+            if onehot_updates:
+                hot = jax.lax.broadcasted_iota(
+                    i4, lat_hist.shape, 1) == b[:, None]
+                lat_hist = lat_hist + jnp.where(hot, inc[:, None], 0.0)
+            else:
+                rows = jnp.arange(G, dtype=i4)
+                lat_hist = lat_hist.at[rows, b].add(inc)
+            latmax = jnp.where(rec, jnp.maximum(latmax, sojourn), latmax)
+            op_start_new = jnp.where(
+                eoo, arr_next if has_arr else now, op_start_r)
         se_c = se[ci[:, 0]]                          # (G, 2)
         span_next = jnp.where(eoo, pack_span(se_c[:, 0], se_c[:, 1]),
                               pft_r[:, 1] + 1.0)
@@ -450,7 +506,13 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
         slot = tag_tid(jnp.min(
             tag_encode(jnp.maximum(slots_row, EPOCH), slot_iota), axis=1))
         slot_min = sel_thread(slots_row, slot)
-        pstart = jnp.maximum(now, slot_min)
+        if has_arr:
+            # Open loop: a not-yet-arrived op issues at its arrival clock
+            # (post-T_lock now, exactly the loops' max(now, arrival)).
+            t_iss = jnp.where(eoo, jnp.maximum(now, arr_next), now)
+        else:
+            t_iss = now
+        pstart = jnp.maximum(t_iss, slot_min)
         if has_bmem:
             pstart = jnp.maximum(pstart, pf_bw)
             pf_bw = jnp.where(issue, pstart + cost_bmem, pf_bw)
@@ -465,15 +527,30 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
 
         # -- yield: context switch, park or re-enter the ready ring ---------
         now = now + T_sw
-        stamp = upd_thread(stamp, tid, jnp.where(park, BIG, ticket))
+        if has_arr:
+            # Open loop: the freshly fetched op has not arrived yet --
+            # park until the arrival clock.  Mutually exclusive with the
+            # IO park (that one requires ~eoo).
+            park_arr = eoo & (arr_next > now)
+            parked_any = park | park_arr
+            wake_val = jnp.where(park_arr, arr_next,
+                                 jnp.where(park,
+                                           jnp.maximum(park_until, now),
+                                           jnp.inf))
+        else:
+            parked_any = park
+            wake_val = jnp.where(park, jnp.maximum(park_until, now),
+                                 jnp.inf)
+        stamp = upd_thread(stamp, tid, jnp.where(parked_any, BIG, ticket))
         # Wake times are stored exact (no tag): the starved idle-skip and
         # the eligibility compare read them back as *times*, and a tagged
         # store would perturb those reads by up to 2**TAG_BITS ulps per
         # park.  ``ring_keys`` re-tags on the fly for the pop ordering.
-        wake = upd_thread(wake, tid,
-                          jnp.where(park, jnp.maximum(park_until, now),
-                                    jnp.inf))
-        pft = upd_thread(pft, tid, jnp.stack([pf_tid, span_next], axis=1))
+        wake = upd_thread(wake, tid, wake_val)
+        pft_cols = [pf_tid, span_next]
+        if has_lat:
+            pft_cols.append(op_start_new)
+        pft = upd_thread(pft, tid, jnp.stack(pft_cols, axis=1))
 
         crossed = (counted >= n_ops) & ~reached
         if multicore:
@@ -519,28 +596,35 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
             t_end = jnp.where(crossed, now, cf[:, 4])
         cf = jnp.stack([now, pf_bw, lock_next, t_start, t_end, mem_stall],
                        axis=1)
-        ci = jnp.stack([cursor, io_rr, done, counted, mem_acc, measuring],
-                       axis=1)
+        ci_cols = [cursor, io_rr, done, counted, mem_acc, measuring]
+        if has_lat:
+            ci_cols.append(missed)
+        ci = jnp.stack(ci_cols, axis=1)
         out = (cf, ci, stamp, wake, pft, pf_slots)
         if multicore:
             out = out + (cores,)
-        return out + io_out
+        out = out + io_out
+        if has_lat:
+            out = out + (lat_hist, latmax)
+        return out
 
     return substep
 
 
-def fused_steps(substep, state, u_block, kd, se, n_trace, L_mem_g, warm_g,
-                n_ops, dyn, *, interpret: bool | None = None):
+def fused_steps(substep, state, u_block, kd, se, arr, n_trace, L_mem_g,
+                nthr_g, warm_g, n_ops, dyn, *, interpret: bool | None = None):
     """Advance ``state`` by K substeps in one ``pallas_call`` invocation.
 
     ``substep`` must come from :func:`make_substep` (built with
     ``onehot_updates=True, eager_wmin=True`` for the kernel-friendly op
-    subset); ``u_block`` is the ``(K, n_u, G)`` uniform feed.  All planes
-    are kernel refs: they are read once, carried through an in-kernel
-    ``fori_loop`` over the K substeps, and written back once, so on a
-    compiled backend the scheduler state never leaves VMEM between
-    substeps.  ``interpret=None`` auto-selects interpreter mode off-TPU
-    (CPU CI validates bit-identity against the jnp scan path this way).
+    subset); ``u_block`` is the ``(K, n_u, G)`` uniform feed; ``arr`` the
+    shared arrival vector (a 1-wide dummy closed loop) and ``nthr_g`` the
+    per-cell thread counts.  All planes are kernel refs: they are read
+    once, carried through an in-kernel ``fori_loop`` over the K substeps,
+    and written back once, so on a compiled backend the scheduler state
+    never leaves VMEM between substeps.  ``interpret=None`` auto-selects
+    interpreter mode off-TPU (CPU CI validates bit-identity against the
+    jnp scan path this way).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -554,20 +638,22 @@ def fused_steps(substep, state, u_block, kd, se, n_trace, L_mem_g, warm_g,
     dyn_arr = jnp.stack([jnp.asarray(d, jnp.float64) for d in dyn])
 
     def kernel(*refs):
-        ins = refs[:n_state + 7]
-        outs = refs[n_state + 7:]
+        ins = refs[:n_state + 9]
+        outs = refs[n_state + 9:]
         s0 = tuple(r[:] for r in ins[:n_state])
-        (u_ref, kd_ref, se_ref, ntr_ref, lmem_ref, warm_ref, nops_ref,
-         ) = ins[n_state:n_state + 7]
+        (u_ref, kd_ref, se_ref, arr_ref, ntr_ref, lmem_ref, nthr_ref,
+         warm_ref, nops_ref) = ins[n_state:n_state + 9]
         kd_v, se_v = kd_ref[:], se_ref[:]
+        arr_v = arr_ref[:]
         n_trace = ntr_ref[0]
         L_mem_g, warm_g = lmem_ref[:], warm_ref[:]
+        nthr_v = nthr_ref[:]
         n_ops = nops_ref[0]
         dyn_v = tuple(nops_ref[1 + j] for j in range(dyn_arr.shape[0]))
 
         def body(k, s):
-            return substep(s, u_ref[k], kd_v, se_v, n_trace, L_mem_g,
-                           warm_g, n_ops, dyn_v)
+            return substep(s, u_ref[k], kd_v, se_v, arr_v, nthr_v,
+                           n_trace, L_mem_g, warm_g, n_ops, dyn_v)
 
         final = jax.lax.fori_loop(0, K, body, s0)
         for ref, val in zip(outs, final):
@@ -581,7 +667,7 @@ def fused_steps(substep, state, u_block, kd, se, n_trace, L_mem_g, warm_g,
         out_shape=tuple(
             jax.ShapeDtypeStruct(s.shape, s.dtype) for s in state),
         interpret=interpret,
-    )(*state, u_block, kd, se,
+    )(*state, u_block, kd, se, arr,
       jnp.asarray(n_trace, jnp.int32).reshape(1),
-      L_mem_g, warm_g, scal)
+      L_mem_g, nthr_g, warm_g, scal)
     return out

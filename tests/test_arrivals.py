@@ -1,0 +1,513 @@
+"""Open-loop arrival processes + the tail-latency accumulator.
+
+Contract, strongest first:
+
+  1. :func:`generate_arrivals` is a *pure function* of ``(spec, n)``:
+     byte-identical regeneration, and prefix stability
+     (``generate(spec, n)[:m] == generate(spec, m)``) -- the property
+     that lets the sweep cell cache key on the spec instead of the data.
+  2. The processes have their advertised statistics (property-tested):
+     Poisson interarrival mean within CI bounds, bursty duty-cycle
+     conservation (long-run mean rate == ``rate`` while the in-burst
+     rate is ``rate / on_fraction``), diurnal strictly monotone.
+  3. The generic and compiled loops produce *bit-identical* tail
+     summaries under open-loop arrivals, for every registered engine x
+     {closed, poisson, bursty} (the jax grid's tolerance half of the
+     matrix lives in tests/test_replay_jax.py).
+  4. Accumulator edge cases: empty cells (all missed), single-op cells,
+     identical latencies, f32-vs-f64 histogram binning, and artifact
+     JSON round-trips (old artifacts without ``tail`` still load).
+  5. The sweep cell cache stores percentile summaries: a
+     ``collect_percentiles`` sweep hits cells cached by a previous
+     percentile sweep, upgrades-in-place cells cached without one, and
+     never serves closed-loop cells to open-loop requests.
+"""
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import workloads
+from repro.core.engines import available_engines, run_trace
+from repro.core.experiment import (
+    RunArtifact,
+    RunOptions,
+    default_scenario,
+    run_scenario,
+)
+from repro.core.sim import (
+    HIST_REL_ERROR,
+    ArrivalSpec,
+    LatencySummary,
+    SimConfig,
+    generate_arrivals,
+    simulate,
+    simulate_compiled,
+    summarize_exact,
+    summarize_hist,
+    sweep_latency,
+    trace_source,
+)
+from repro.core.sim.arrivals import (
+    HIST_BINS,
+    HIST_LO,
+    HIST_RATIO,
+    hist_bin,
+    hist_bin_value,
+)
+from repro.core.sim import sweep as sweep_mod
+
+from _hypothesis_support import given, settings, st  # optional shim
+
+US = 1e-6
+
+ENGINES = sorted({cls.engine_name for cls in available_engines().values()})
+
+SPECS = {
+    "poisson": ArrivalSpec(kind="poisson", rate=150e3, seed=5),
+    "bursty": ArrivalSpec(kind="bursty", rate=150e3, seed=5,
+                          on_fraction=0.3, period=0.002),
+    "diurnal": ArrivalSpec(kind="diurnal", rate=150e3, seed=5,
+                           period=0.005, amplitude=0.7),
+    "mix": ArrivalSpec(kind="mix", seed=5, tenants=(
+        {"kind": "poisson", "rate": 90e3},
+        {"kind": "bursty", "rate": 60e3, "on_fraction": 0.5,
+         "period": 0.004},
+    )),
+}
+
+
+@pytest.fixture(scope="module")
+def small_trace():
+    store = available_engines()["hash-index"](4_000)
+    wl = workloads.zipf(4_000, 1_500, 0.99, (1, 0), seed=3)
+    return run_trace(store, wl)
+
+
+# -- 1. determinism ----------------------------------------------------------
+
+
+class TestDeterminism:
+    @pytest.mark.parametrize("kind", sorted(SPECS))
+    def test_byte_identical_regeneration(self, kind):
+        spec = SPECS[kind]
+        a = generate_arrivals(spec, 3000)
+        b = generate_arrivals(ArrivalSpec.from_dict(spec.to_dict()), 3000)
+        assert a.tobytes() == b.tobytes()
+        assert a.dtype == np.float64
+
+    @pytest.mark.parametrize("kind", sorted(SPECS))
+    def test_prefix_stability(self, kind):
+        # Cells consume prefixes of one stream; a cell's result must not
+        # depend on how long an array the sweep happened to generate.
+        spec = SPECS[kind]
+        long = generate_arrivals(spec, 4000)
+        for m in (1, 7, 100, 3999):
+            assert long[:m].tobytes() == generate_arrivals(spec, m).tobytes()
+
+    @pytest.mark.parametrize("kind", sorted(SPECS))
+    def test_monotone_nonnegative(self, kind):
+        t = generate_arrivals(SPECS[kind], 3000)
+        assert np.all(np.diff(t) >= 0.0) and t[0] >= 0.0
+
+    def test_seed_changes_stream(self):
+        a = generate_arrivals(ArrivalSpec(rate=1e5, seed=0), 500)
+        b = generate_arrivals(ArrivalSpec(rate=1e5, seed=1), 500)
+        assert not np.array_equal(a, b)
+
+    def test_accepts_dict_and_rejects_unknown_fields(self):
+        d = {"kind": "poisson", "rate": 1e5, "seed": 2}
+        assert np.array_equal(generate_arrivals(d, 64),
+                              generate_arrivals(ArrivalSpec.from_dict(d), 64))
+        with pytest.raises(ValueError, match="unknown arrival spec"):
+            ArrivalSpec.from_dict({"kind": "poisson", "rats": 1e5})
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="kind"):
+            ArrivalSpec(kind="lumpy")
+        with pytest.raises(ValueError, match="rate"):
+            ArrivalSpec(rate=0.0)
+        with pytest.raises(ValueError, match="on_fraction"):
+            ArrivalSpec(kind="bursty", on_fraction=0.0)
+        with pytest.raises(ValueError, match="deadline"):
+            ArrivalSpec(deadline=-1e-3)
+        with pytest.raises(ValueError, match="tenant"):
+            ArrivalSpec(kind="mix")
+        with pytest.raises(ValueError, match="nested mix"):
+            ArrivalSpec(kind="mix", tenants=(
+                {"kind": "mix", "tenants": ({"kind": "poisson"},)},))
+
+    def test_mix_offered_rate_sums_tenants(self):
+        assert SPECS["mix"].offered_rate == pytest.approx(150e3)
+
+    def test_key_is_stable_json(self):
+        spec = SPECS["bursty"]
+        assert json.loads(spec.key()) == spec.to_dict()
+        assert spec.key() == ArrivalSpec.from_dict(spec.to_dict()).key()
+
+
+# -- 2. process statistics (property-tested) ---------------------------------
+
+
+class TestProcessStatistics:
+    @given(st.integers(0, 2**31 - 1),
+           st.floats(1e3, 1e6, allow_nan=False))
+    @settings(max_examples=25, deadline=None)
+    def test_poisson_interarrival_mean_in_ci(self, seed, rate):
+        n = 4000
+        t = generate_arrivals(ArrivalSpec(rate=rate, seed=seed), n)
+        gaps = np.diff(np.concatenate(([0.0], t)))
+        # exponential(1/rate): sample mean has sd (1/rate)/sqrt(n);
+        # 5 sigma keeps the property test deterministic-in-practice
+        assert abs(gaps.mean() - 1.0 / rate) < 5.0 / (rate * math.sqrt(n))
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_bursty_duty_cycle_conservation(self, seed):
+        # ~40 ON/OFF cycles: the long-run mean rate must come out at
+        # ``rate`` even though in-burst arrivals run at rate/on_fraction.
+        rate, frac, period, n = 200e3, 0.25, 0.001, 80_000
+        spec = ArrivalSpec(kind="bursty", rate=rate, seed=seed,
+                           on_fraction=frac, period=period)
+        t = generate_arrivals(spec, n)
+        achieved = n / t[-1]
+        assert achieved == pytest.approx(rate, rel=0.25)
+        # in-burst gaps concentrate near 1/(rate/frac) << the OFF gaps:
+        # the median gap reflects the ON rate, not the mean rate
+        med_gap = float(np.median(np.diff(t)))
+        assert med_gap < 1.5 / (rate / frac)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_diurnal_monotone_and_rate_conserving(self, seed):
+        spec = ArrivalSpec(kind="diurnal", rate=100e3, seed=seed,
+                           period=0.01, amplitude=0.8)
+        t = generate_arrivals(spec, 20_000)
+        assert np.all(np.diff(t) > 0.0)        # thinning: strictly increasing
+        # 20 full periods: the sinusoid integrates out
+        assert 20_000 / t[-1] == pytest.approx(100e3, rel=0.15)
+
+    def test_diurnal_rate_actually_swings(self):
+        # Arrivals per half-period alternate high/low with the sinusoid.
+        spec = ArrivalSpec(kind="diurnal", rate=100e3, seed=9,
+                           period=0.01, amplitude=0.8)
+        t = generate_arrivals(spec, 20_000)
+        half = 0.005
+        counts = np.bincount((t // half).astype(int))
+        highs, lows = counts[0:-1:2], counts[1:-1:2]
+        assert highs.mean() > 2.0 * lows.mean()
+
+
+# -- 3. generic vs compiled loop: bit-identical summaries --------------------
+
+
+def _arrival_array(spec, cfg, n_ops):
+    total = cfg.n_cores * cfg.n_threads
+    return generate_arrivals(spec, total + 2 * total + n_ops + 1)
+
+
+def _summaries_identical(a, b):
+    assert (a is None) == (b is None)
+    if a is None:
+        return
+    da, db = a.to_dict(), b.to_dict()
+    assert da.keys() == db.keys()
+    for k in da:
+        va, vb = da[k], db[k]
+        if isinstance(va, float) and math.isnan(va):
+            assert math.isnan(vb), k
+        else:
+            assert va == vb, k
+
+
+MODES = [None, "poisson", "bursty"]
+
+
+class TestLoopBitIdentity:
+    @pytest.mark.parametrize("engine", ENGINES)
+    @pytest.mark.parametrize("mode", MODES, ids=["closed", "poisson",
+                                                 "bursty"])
+    def test_generic_vs_compiled_summary(self, engine, mode):
+        store = available_engines()[engine](4_000)
+        wl = workloads.zipf(4_000, 1_200, 0.99, (1, 0), seed=3)
+        tr = run_trace(store, wl)
+        cfg = SimConfig(seed=7, n_threads=16, L_mem=3 * US)
+        n_ops = 300
+        kw = dict(collect_percentiles=True)
+        if mode is not None:
+            kw["arrivals"] = _arrival_array(SPECS[mode], cfg, n_ops)
+        g = simulate(cfg, trace_source(tr.ops), n_ops, **kw)
+        c = simulate_compiled(cfg, tr.trace, n_ops, **kw)
+        assert g.throughput == c.throughput
+        assert g.time == c.time
+        assert g.missed_ops == c.missed_ops
+        _summaries_identical(g.latency_summary, c.latency_summary)
+
+    @pytest.mark.parametrize("mode", ["poisson", "bursty"])
+    def test_multicore_fast_path_summary(self, small_trace, mode):
+        cfg = SimConfig(seed=7, n_cores=2, n_threads=8, L_mem=2 * US)
+        arr = _arrival_array(SPECS[mode], cfg, 400)
+        g = simulate(cfg, trace_source(small_trace.ops), 400,
+                     arrivals=arr, collect_percentiles=True)
+        c = simulate_compiled(cfg, small_trace.trace, 400,
+                              arrivals=arr, collect_percentiles=True)
+        assert g.throughput == c.throughput
+        _summaries_identical(g.latency_summary, c.latency_summary)
+
+    def test_deadline_marks_misses(self, small_trace):
+        cfg = SimConfig(seed=7, n_threads=16, L_mem=5 * US)
+        spec = SPECS["poisson"]
+        arr = _arrival_array(spec, cfg, 400)
+        # deadline at the no-deadline run's P90: the same deterministic
+        # replay must then miss ~10% of ops -- a guaranteed nontrivial
+        # split between counted and missed
+        probe = simulate_compiled(cfg, small_trace.trace, 400,
+                                  arrivals=arr, collect_percentiles=True)
+        deadline = probe.latency_summary.p90
+        g = simulate(cfg, trace_source(small_trace.ops), 400, arrivals=arr,
+                     collect_percentiles=True, deadline=deadline)
+        c = simulate_compiled(cfg, small_trace.trace, 400, arrivals=arr,
+                              collect_percentiles=True, deadline=deadline)
+        assert g.missed_ops == c.missed_ops > 0
+        s = g.latency_summary
+        assert s.count + s.missed == 400
+        assert s.count > 0 and 0.0 < s.miss_rate < 1.0
+        # misses are excluded from the accumulator: whatever remains met
+        # the SLA, so every reported percentile is under the deadline
+        assert s.p99 <= deadline
+        _summaries_identical(s, c.latency_summary)
+
+    def test_open_loop_underload_matches_offered_rate(self, small_trace):
+        # At half capacity the loop must *pace* (park on the arrival
+        # clock), not free-run: achieved ~~ offered, well under capacity.
+        cfg = SimConfig(seed=7, n_threads=16, L_mem=1 * US)
+        closed = simulate_compiled(cfg, small_trace.trace, 800)
+        spec = ArrivalSpec(rate=0.5 * closed.throughput, seed=1)
+        r = simulate_compiled(cfg, small_trace.trace, 800,
+                              arrivals=_arrival_array(spec, cfg, 800),
+                              collect_percentiles=True)
+        assert r.throughput <= spec.rate * 1.05
+        assert r.throughput >= spec.rate * 0.8
+
+
+# -- 4. accumulator edge cases -----------------------------------------------
+
+
+class TestAccumulator:
+    def test_empty_cell_all_missed(self):
+        for s in (summarize_exact([], missed=7),
+                  summarize_hist(np.zeros(HIST_BINS), 0.0, missed=7)):
+            assert s.count == 0 and s.missed == 7
+            assert s.miss_rate == 1.0
+            assert all(math.isnan(v)
+                       for v in (s.p50, s.p90, s.p99, s.max))
+
+    def test_no_ops_at_all(self):
+        s = summarize_exact([])
+        assert s.miss_rate == 0.0 and s.count == 0
+
+    def test_single_op_cell(self):
+        s = summarize_exact([42e-6])
+        assert (s.p50, s.p90, s.p99, s.max) == (42e-6,) * 4
+        h = summarize_hist(
+            np.bincount(hist_bin([42e-6]), minlength=HIST_BINS), 42e-6)
+        assert h.count == 1 and h.max == 42e-6
+        assert h.p50 == h.p99 == pytest.approx(42e-6, rel=HIST_REL_ERROR)
+
+    def test_identical_latencies(self):
+        vals = [3.7e-5] * 1000
+        s = summarize_exact(vals)
+        assert s.p50 == s.p99 == s.max == 3.7e-5
+        h = summarize_hist(
+            np.bincount(hist_bin(vals), minlength=HIST_BINS), 3.7e-5)
+        assert h.p50 == h.p99 == pytest.approx(3.7e-5, rel=HIST_REL_ERROR)
+
+    def test_nearest_rank_small_n(self):
+        s = summarize_exact([1.0, 2.0, 3.0, 4.0])
+        assert (s.p50, s.p90, s.p99, s.max) == (2.0, 4.0, 4.0, 4.0)
+
+    def test_hist_bound_on_random_samples(self):
+        rng = np.random.default_rng(0)
+        vals = rng.lognormal(math.log(1e-4), 1.0, 5000)
+        exact = summarize_exact(vals.tolist())
+        h = summarize_hist(
+            np.bincount(hist_bin(vals), minlength=HIST_BINS), vals.max())
+        for q in ("p50", "p90", "p99"):
+            assert getattr(h, q) == pytest.approx(
+                getattr(exact, q), rel=HIST_REL_ERROR)
+        assert h.max == exact.max   # max is tracked exactly
+
+    def test_hist_clamps_out_of_range(self):
+        b = hist_bin([0.0, HIST_LO / 10, 1e9])
+        assert b[0] == b[1] == 0 and b[2] == HIST_BINS - 1
+
+    def test_bin_midpoint_inverts_bin(self):
+        bins = np.arange(HIST_BINS)
+        assert np.array_equal(hist_bin(hist_bin_value(bins)), bins)
+
+    def test_f32_vs_f64_binning(self):
+        # The jax grid may run in f32 (enable_x64 off): binning a value
+        # stored as f32 must land in the same bin as the f64 path for
+        # values away from bin edges (geometric midpoints are the
+        # farthest-from-edge representatives; f32 rounding is ~1e-7
+        # relative, the bin is ~3.7e-2 wide in relative terms).
+        mids = hist_bin_value(np.arange(HIST_BINS))
+        assert np.array_equal(hist_bin(mids.astype(np.float32)),
+                              hist_bin(mids))
+        # and values *on* edges may legally differ by at most one bin
+        edges = HIST_LO * HIST_RATIO ** np.arange(1, HIST_BINS)
+        d = np.abs(hist_bin(edges.astype(np.float32)) - hist_bin(edges))
+        assert d.max() <= 1
+
+    def test_summary_json_round_trip(self):
+        s = LatencySummary(10, 1e-5, 2e-5, 3e-5, 4e-5, missed=2,
+                           source="hist")
+        assert LatencySummary.from_dict(
+            json.loads(json.dumps(s.to_dict()))) == s
+        nan_s = summarize_exact([], missed=1)
+        back = LatencySummary.from_dict(
+            json.loads(json.dumps(nan_s.to_dict())))
+        _summaries_identical(nan_s, back)
+
+
+# -- artifact round-trips ----------------------------------------------------
+
+
+class TestArtifactRoundTrip:
+    @pytest.fixture(scope="class")
+    def art(self):
+        s = default_scenario("hash-index", n_keys=2_000, n_wl_ops=800,
+                             n_ops=300, latencies_us=(0.5, 5.0),
+                             thread_candidates=(8,),
+                             arrival={"kind": "poisson", "rate": 2e5,
+                                      "seed": 3})
+        return run_scenario(s, RunOptions(collect_percentiles=True,
+                                          cache_dir=None))
+
+    def test_tail_fields_round_trip(self, art):
+        assert all(r.tail is not None for r in art.rows)
+        t = art.rows[0].tail
+        assert t["offered_load"] == pytest.approx(2e5)
+        assert t["source"] == "exact"
+        assert t["p99_us"] >= t["p50_us"] > 0
+        assert RunArtifact.from_json(art.to_json()) == art
+
+    def test_old_artifacts_without_tail_still_load(self, art):
+        doc = json.loads(art.to_json())
+        for r in doc["rows"]:
+            r.pop("tail", None)
+        old = RunArtifact.from_json(json.dumps(doc))
+        assert all(r.tail is None for r in old.rows)
+        assert len(old.rows) == len(art.rows)
+
+    def test_scenario_arrival_validated_eagerly(self):
+        with pytest.raises(ValueError, match="rate"):
+            default_scenario("hash-index",
+                             arrival={"kind": "poisson", "rate": -1.0})
+
+    def test_closed_loop_without_percentiles_has_no_tail(self):
+        s = default_scenario("hash-index", n_keys=2_000, n_wl_ops=800,
+                             n_ops=200, latencies_us=(2.0,),
+                             thread_candidates=(8,))
+        art = run_scenario(s, RunOptions(cache_dir=None))
+        assert art.rows[0].tail is None
+
+
+# -- 5. sweep cache: percentile summaries are cached -------------------------
+
+
+class TestSweepCachePercentiles:
+    LATS = (1 * US, 5 * US)
+    CANDS = (8, 16)
+
+    def _sweep(self, tr, tmp_path, **kw):
+        cfg = SimConfig(P=12, seed=7)
+        return sweep_latency(cfg, tr.trace, list(self.LATS), self.CANDS,
+                             n_ops=300, processes=1,
+                             cache_dir=str(tmp_path), **kw)
+
+    def _count_runs(self, monkeypatch):
+        calls = {"n": 0}
+        real = sweep_mod._run_cell
+
+        def counting(*a, **kw):
+            calls["n"] += 1
+            return real(*a, **kw)
+
+        monkeypatch.setattr(sweep_mod, "_run_cell", counting)
+        return calls
+
+    def test_percentile_sweep_hits_its_own_cache(self, small_trace,
+                                                 tmp_path, monkeypatch):
+        spec = SPECS["poisson"]
+        cold = self._sweep(small_trace, tmp_path, arrival=spec,
+                           collect_percentiles=True)
+        calls = self._count_runs(monkeypatch)
+        warm = self._sweep(small_trace, tmp_path, arrival=spec,
+                           collect_percentiles=True)
+        assert calls["n"] == 0, "warm percentile sweep recomputed cells"
+        for a, b in zip(cold, warm):
+            assert a.throughput == b.throughput
+            _summaries_identical(a.result.latency_summary,
+                                 b.result.latency_summary)
+            assert b.result.latency_summary.source == "exact"
+
+    def test_summaryless_cells_upgrade_in_place(self, small_trace,
+                                                tmp_path, monkeypatch):
+        # Cells cached by a plain sweep lack the summary: a percentile
+        # sweep must treat them as misses (recompute), after which the
+        # upgraded cells satisfy both kinds of request.
+        spec = SPECS["poisson"]
+        self._sweep(small_trace, tmp_path, arrival=spec)
+        calls = self._count_runs(monkeypatch)
+        self._sweep(small_trace, tmp_path, arrival=spec,
+                    collect_percentiles=True)
+        n_cells = len(self.LATS) * len(self.CANDS)
+        assert calls["n"] == n_cells, "summaryless cells must be misses"
+        calls["n"] = 0
+        self._sweep(small_trace, tmp_path, arrival=spec)   # plain request
+        self._sweep(small_trace, tmp_path, arrival=spec,
+                    collect_percentiles=True)
+        assert calls["n"] == 0, "upgraded cells must serve both requests"
+
+    def test_closed_and_open_cells_never_shared(self, small_trace,
+                                                tmp_path, monkeypatch):
+        self._sweep(small_trace, tmp_path, collect_percentiles=True)
+        calls = self._count_runs(monkeypatch)
+        open_pts = self._sweep(small_trace, tmp_path,
+                               arrival=SPECS["poisson"],
+                               collect_percentiles=True)
+        assert calls["n"] == len(self.LATS) * len(self.CANDS)
+        # and different arrival specs get different cells too
+        calls["n"] = 0
+        other = dataclasses.replace(SPECS["poisson"], seed=99)
+        self._sweep(small_trace, tmp_path, arrival=other,
+                    collect_percentiles=True)
+        assert calls["n"] == len(self.LATS) * len(self.CANDS)
+        assert all(p.result.latency_summary is not None for p in open_pts)
+
+    def test_arrival_dict_and_spec_key_identically(self, small_trace,
+                                                   tmp_path, monkeypatch):
+        spec = SPECS["bursty"]
+        self._sweep(small_trace, tmp_path, arrival=spec,
+                    collect_percentiles=True)
+        calls = self._count_runs(monkeypatch)
+        self._sweep(small_trace, tmp_path, arrival=spec.to_dict(),
+                    collect_percentiles=True)
+        assert calls["n"] == 0
+
+    def test_missed_ops_round_trip_through_cache(self, small_trace,
+                                                 tmp_path, monkeypatch):
+        spec = dataclasses.replace(SPECS["poisson"], rate=400e3,
+                                   deadline=120e-6)
+        cold = self._sweep(small_trace, tmp_path, arrival=spec,
+                           collect_percentiles=True)
+        assert any(p.result.missed_ops > 0 for p in cold)
+        calls = self._count_runs(monkeypatch)
+        warm = self._sweep(small_trace, tmp_path, arrival=spec,
+                           collect_percentiles=True)
+        assert calls["n"] == 0
+        for a, b in zip(cold, warm):
+            assert a.result.missed_ops == b.result.missed_ops

@@ -368,7 +368,8 @@ class TestCLI:
 
     def test_list_workloads_canonical_only(self, capsys, monkeypatch):
         out = self._main(["--list-workloads"], capsys, monkeypatch).split()
-        assert out == ["gaussian", "graph-cache-leader", "uniform", "zipf"]
+        assert out == ["drifting-zipf", "gaussian", "graph-cache-leader",
+                       "uniform", "zipf"]
 
     def test_scenario_flag_runs_spec(self, capsys, monkeypatch, tmp_path):
         spec = tmp_path / "tiny.json"

@@ -1,24 +1,41 @@
 #!/usr/bin/env python
-"""Validate ``BENCH_jax_grid.json`` measurements (schema + perf floors).
+"""Validate checked-in benchmark measurements (schema + floors).
+
+Handles two measurement schemas, dispatched on the file's ``schema``
+field:
+
+``repro.jax_grid_bench/v1`` (``BENCH_jax_grid.json``)
+    Perf measurements.  Baseline mode enforces the repo's acceptance
+    floors on whatever suites it contains: warm jax >= 1x the loop
+    pipeline on the paper default grid, >= 5x on a >= 2000-cell mega
+    grid, and cohort early-exit >= 1.5x the monolithic single-scan
+    layout on the heterogeneous (het) grid.
+
+``repro.tail_latency_bench/v1`` (``BENCH_tail_latency.json``)
+    Open-loop tail-latency measurements (see
+    ``benchmarks/tail_latency_bench.py``).  Invariants instead of perf
+    floors: achieved load <= offered load (an open-loop run cannot
+    complete faster than ops arrive, beyond a small ramp tolerance),
+    P99 >= P90 >= P50 > 0 per entry, miss_rate in [0, 1], and >= 2
+    distinct offered loads so the load axis of the figure exists.
 
 Two modes::
 
     python tools/check_bench.py BENCH_jax_grid.json
-        Schema-validate the checked-in baseline and enforce the repo's
-        acceptance floors on whatever suites it contains: warm jax >= 1x
-        the loop pipeline on the paper default grid, >= 5x on a
-        >= 2000-cell mega grid, and cohort early-exit >= 1.5x the
-        monolithic single-scan layout on the heterogeneous (het) grid.
+        Schema-validate the checked-in baseline and enforce its
+        schema's floors/invariants.
 
     python tools/check_bench.py --fresh smoke.json \
         --baseline BENCH_jax_grid.json [--max-regress 3.0]
-        CI perf-smoke: schema-validate a freshly measured file and fail
-        if its warm jax/loop ratio regressed by more than
-        ``--max-regress`` x vs the same-named suite in the baseline.
-        The threshold is deliberately generous -- CI machines differ
-        from the machine that produced the baseline; the job exists to
-        catch order-of-magnitude regressions (an accidentally disabled
-        jit, a quadratic step), not 20% noise.
+        CI perf-smoke: schema-validate a freshly measured file too.
+        For the jax-grid schema, additionally fail if the warm
+        jax/loop ratio regressed by more than ``--max-regress`` x vs
+        the same-named suite in the baseline (deliberately generous --
+        CI machines differ from the baseline machine; the job catches
+        order-of-magnitude regressions, not 20% noise).  For the
+        tail-latency schema the fresh file's invariants are enforced
+        directly -- they are machine-independent -- and no ratio is
+        compared.
 
 Exit status 0 on success; 1 with a message on any failure.
 """
@@ -29,6 +46,24 @@ import json
 import sys
 
 SCHEMA = "repro.jax_grid_bench/v1"
+TAIL_SCHEMA = "repro.tail_latency_bench/v1"
+
+# Open-loop invariants: achieved may exceed offered only by the ramp
+# tolerance.  The first total_threads arrivals are backlogged at t=0
+# and burn down faster than the offered rate, so a measurement window
+# of n_ops ops overshoots by O(threads / n_ops): ~1.7% at the full
+# suite's 4000 ops, ~4% at the smoke suite's 800.
+TAIL_RAMP_TOL = 1.05
+TAIL_MIN_LOADS = 2
+
+_TAIL_ENTRY_FIELDS = {
+    "name": str, "engine": str, "L_us": (int, float), "n_threads": int,
+    "n_ops": int, "offered_frac": (int, float),
+    "offered_load": (int, float), "achieved_load": (int, float),
+    "p50_us": (int, float), "p90_us": (int, float),
+    "p99_us": (int, float), "max_us": (int, float), "count": int,
+    "missed": int, "miss_rate": (int, float), "source": str,
+}
 
 _ENTRY_FIELDS = {
     "name": str, "engine": str, "n_ssd": int, "n_latencies": int,
@@ -62,13 +97,73 @@ def load(path: str) -> dict:
             doc = json.load(f)
     except (OSError, ValueError) as e:
         fail(f"{path}: unreadable or not JSON ({e})")
-    validate_schema(doc, path)
+    if isinstance(doc, dict) and doc.get("schema") == TAIL_SCHEMA:
+        validate_tail_schema(doc, path)
+    else:
+        validate_schema(doc, path)
     return doc
+
+
+def validate_tail_schema(doc: dict, path: str) -> None:
+    host = doc.get("host")
+    if not isinstance(host, dict) or "cpu_count" not in host:
+        fail(f"{path}: missing/invalid host block")
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        fail(f"{path}: entries must be a non-empty list")
+    for e in entries:
+        if not isinstance(e, dict):
+            fail(f"{path}: entry is not an object: {e!r}")
+        for field, typ in _TAIL_ENTRY_FIELDS.items():
+            if field not in e:
+                fail(f"{path}: tail entry {e.get('name', '?')!r} "
+                     f"(L={e.get('L_us', '?')}us) missing {field!r}")
+            if not isinstance(e[field], typ) or isinstance(e[field], bool):
+                fail(f"{path}: tail entry {e['name']!r} field {field!r} "
+                     f"has type {type(e[field]).__name__}")
+    summary = doc.get("summary")
+    if not isinstance(summary, dict) or not summary:
+        fail(f"{path}: summary must be a non-empty object")
+    for name, agg in summary.items():
+        for field in ("capacity", "offered_fracs", "n_points"):
+            if field not in agg:
+                fail(f"{path}: summary {name!r} missing {field!r}")
+
+
+def check_tail_invariants(doc: dict, path: str) -> list[str]:
+    """The machine-independent open-loop invariants (see module doc)."""
+    entries = doc["entries"]
+    loads = set()
+    for e in entries:
+        tag = f"{e['name']} L={e['L_us']}us @{e['offered_frac']}"
+        loads.add(e["offered_load"])
+        if e["offered_load"] <= 0:
+            fail(f"{path}: {tag}: offered_load must be > 0")
+        if e["achieved_load"] > e["offered_load"] * TAIL_RAMP_TOL:
+            fail(f"{path}: {tag}: achieved load {e['achieved_load']} "
+                 f"exceeds offered {e['offered_load']} x {TAIL_RAMP_TOL} "
+                 "-- an open-loop run cannot outrun its arrivals")
+        if not 0 < e["p50_us"] <= e["p90_us"] <= e["p99_us"] \
+                <= e["max_us"]:
+            fail(f"{path}: {tag}: percentiles not ordered "
+                 f"(p50={e['p50_us']} p90={e['p90_us']} "
+                 f"p99={e['p99_us']} max={e['max_us']})")
+        if not 0 <= e["miss_rate"] <= 1:
+            fail(f"{path}: {tag}: miss_rate {e['miss_rate']} not in "
+                 "[0, 1]")
+        if e["count"] + e["missed"] != e["n_ops"]:
+            fail(f"{path}: {tag}: count + missed != n_ops")
+    if len(loads) < TAIL_MIN_LOADS:
+        fail(f"{path}: needs >= {TAIL_MIN_LOADS} distinct offered loads, "
+             f"got {sorted(loads)}")
+    worst = max(e["p99_us"] / e["p50_us"] for e in entries)
+    return [f"{path}: open-loop invariants ok ({len(entries)} points, "
+            f"{len(loads)} offered loads, worst P99/P50 {worst:.2f}x)"]
 
 
 def validate_schema(doc: dict, path: str) -> None:
     if not isinstance(doc, dict) or doc.get("schema") != SCHEMA:
-        fail(f"{path}: schema must be {SCHEMA!r}, "
+        fail(f"{path}: schema must be {SCHEMA!r} or {TAIL_SCHEMA!r}, "
              f"got {doc.get('schema') if isinstance(doc, dict) else doc!r}")
     host = doc.get("host")
     if not isinstance(host, dict) or "cpu_count" not in host:
@@ -188,12 +283,23 @@ def main() -> None:
     base = load(baseline_path)
     msgs = [f"{baseline_path}: schema ok "
             f"({len(base['entries'])} entries)"]
-    msgs += check_floors(base, baseline_path)
+    if base["schema"] == TAIL_SCHEMA:
+        msgs += check_tail_invariants(base, baseline_path)
+    else:
+        msgs += check_floors(base, baseline_path)
 
     if args.fresh:
         fresh = load(args.fresh)
         msgs.append(f"{args.fresh}: schema ok")
-        msgs += check_regression(fresh, base, args.max_regress)
+        if fresh["schema"] != base["schema"]:
+            fail(f"{args.fresh}: schema {fresh['schema']!r} does not "
+                 f"match baseline {base['schema']!r}")
+        if base["schema"] == TAIL_SCHEMA:
+            # tail invariants are machine-independent: enforce them on
+            # the fresh measurement directly, no baseline ratio
+            msgs += check_tail_invariants(fresh, args.fresh)
+        else:
+            msgs += check_regression(fresh, base, args.max_regress)
 
     for m in msgs:
         print(f"check_bench: {m}")
