@@ -35,7 +35,13 @@ JSON.  ``--arrival KIND --rate OPS_PER_S`` (optionally ``--burst FRAC``)
 switches a scenario/engine sweep from the closed loop to an open-loop
 arrival process and reports per-cell sojourn tail percentiles
 (``p50_us``/``p99_us``/``miss_rate`` in the derived column; see
-``docs/TAIL_LATENCY.md``).  ``--engine`` accepts any name or alias in the ``repro.core.engines``
+``docs/TAIL_LATENCY.md``).  ``--nodes N`` (optionally ``--replicas R``,
+``--route-latency US``) shards a scenario/engine sweep across an N-node
+hash-partitioned cluster behind a router (the
+:class:`~repro.core.cluster.ClusterSpec` path; per-node and fleet tails
+land in the artifact, see ``docs/CLUSTER.md``), and
+``--list-cluster-scenarios`` prints the named fleet scenarios shipped by
+``benchmarks.cluster_bench``.  ``--engine`` accepts any name or alias in the ``repro.core.engines``
 registry (underscores work: ``hash_index`` == ``hash-index``); ``--devices``
 sets the simulated SSD count (per-device IOPS token clocks, round-robin
 striping, switch fan-out hop) and ``--cores`` the simulated host CPU core
@@ -86,6 +92,11 @@ def emit_artifact(art, prefix: str) -> None:
             if t["offered_load"] is not None:
                 derived += (f";offered_kops={t['offered_load'] / 1e3:.1f}"
                             f";achieved_kops={t['achieved_load'] / 1e3:.1f}")
+        if row.nodes is not None:
+            hot = max(row.nodes, key=lambda n: n["share"])
+            derived += (f";nodes={len(row.nodes)}"
+                        f";hot_node={hot['node']}"
+                        f";hot_share={hot['share']:.2f}")
         common.emit(f"{prefix}/{row.label()}", 1e6 / row.throughput, derived)
     last = art.rows[-1]
     common.emit(
@@ -102,7 +113,8 @@ def run_scenario_cmd(scenario, artifact_out: str | None,
                      backend: str = "loop",
                      prefix: str | None = None,
                      backend_opts: dict | None = None,
-                     arrival: dict | None = None) -> None:
+                     arrival: dict | None = None,
+                     cluster: dict | None = None) -> None:
     """Execute one scenario through the public experiment API.
 
     ``backend_opts`` are jax-backend tuning fields of
@@ -110,7 +122,10 @@ def run_scenario_cmd(scenario, artifact_out: str | None,
     (``use_pallas``/``unroll``/``substeps``/``host_devices``).
     ``arrival`` (an :class:`~repro.core.sim.ArrivalSpec` dict from
     ``--arrival/--rate/--burst``) overrides the scenario's driver and
-    switches on per-cell tail percentiles."""
+    switches on per-cell tail percentiles; ``cluster`` (a partial
+    :class:`~repro.core.cluster.ClusterSpec` dict from
+    ``--nodes/--replicas/--route-latency``) overlays the scenario's
+    fleet shape."""
     import dataclasses as _dc
 
     from repro.core.experiment import Experiment
@@ -120,6 +135,9 @@ def run_scenario_cmd(scenario, artifact_out: str | None,
     try:
         if arrival is not None:
             scenario = _dc.replace(scenario, arrival=arrival)
+        if cluster is not None:
+            scenario = _dc.replace(
+                scenario, cluster={**dict(scenario.cluster), **cluster})
         # an open-loop run without tail stats is useless -- collect them
         collect_percentiles = bool(scenario.arrival)
         # display_name resolves the engine too: unknown names fail here,
@@ -220,6 +238,19 @@ def main() -> None:
                     help="with --arrival bursty: ON-state duty cycle in "
                          "(0, 1] (default 0.25; the ON rate is "
                          "rate / FRAC, so the time-average stays --rate)")
+    ap.add_argument("--nodes", type=int, default=None, metavar="N",
+                    help="with --scenario/--engine: shard the sweep over "
+                         "an N-node hash-partitioned cluster behind a "
+                         "router (per-node + fleet tails in the "
+                         "artifact; see docs/CLUSTER.md)")
+    ap.add_argument("--replicas", type=int, default=None, metavar="R",
+                    help="with --nodes: replication factor with the "
+                         "'spread' read policy (reads rotate over the "
+                         "shard's replica set; default 1)")
+    ap.add_argument("--route-latency", type=float, default=None,
+                    metavar="US",
+                    help="with --nodes: router hop in microseconds, paid "
+                         "once inbound per op (default 0)")
     ap.add_argument("--engine", default=None, metavar="NAME",
                     help="sugar for --scenario: sweep one registered "
                          "engine's default matrix scenario (any registry "
@@ -233,6 +264,9 @@ def main() -> None:
                     help="print canonical engine registry names and exit")
     ap.add_argument("--list-workloads", action="store_true",
                     help="print canonical workload registry names and exit")
+    ap.add_argument("--list-cluster-scenarios", action="store_true",
+                    help="print the named fleet scenarios shipped by "
+                         "benchmarks.cluster_bench and exit")
     args = ap.parse_args()
 
     if args.list_engines:
@@ -240,6 +274,12 @@ def main() -> None:
         return
     if args.list_workloads:
         _list_registry("workloads")
+        return
+    if args.list_cluster_scenarios:
+        from .cluster_bench import SCENARIOS
+
+        for name in sorted(SCENARIOS):
+            print(name)
         return
 
     from . import common
@@ -299,6 +339,23 @@ def main() -> None:
     elif args.rate is not None or args.burst is not None:
         sys.exit("--rate/--burst require --arrival KIND")
 
+    cluster = None
+    if args.nodes is not None:
+        if args.nodes < 1:
+            sys.exit("--nodes must be >= 1")
+        cluster = {"n_nodes": args.nodes}
+        if args.replicas is not None:
+            if not 1 <= args.replicas <= args.nodes:
+                sys.exit("--replicas must be in [1, --nodes]")
+            cluster["replication"] = args.replicas
+            cluster["replica_policy"] = "spread"
+        if args.route_latency is not None:
+            if args.route_latency < 0:
+                sys.exit("--route-latency must be >= 0")
+            cluster["L_route_us"] = args.route_latency
+    elif args.replicas is not None or args.route_latency is not None:
+        sys.exit("--replicas/--route-latency require --nodes N")
+
     print("name,us_per_call,derived")
 
     if args.scenario is not None:
@@ -315,7 +372,8 @@ def main() -> None:
             sys.exit(f"bad scenario spec {args.scenario!r}: {e}")
         run_scenario_cmd(scenario, args.artifact, args.collect_latency,
                          args.adaptive, args.backend,
-                         backend_opts=backend_opts, arrival=arrival)
+                         backend_opts=backend_opts, arrival=arrival,
+                         cluster=cluster)
         return
 
     if args.engine is not None:
@@ -336,7 +394,8 @@ def main() -> None:
         run_scenario_cmd(scenario, args.artifact, args.collect_latency,
                          args.adaptive, args.backend,
                          prefix=prefix,
-                         backend_opts=backend_opts, arrival=arrival)
+                         backend_opts=backend_opts, arrival=arrival,
+                         cluster=cluster)
         return
 
     from . import kernels_bench, paper_figs, roofline_table

@@ -19,6 +19,7 @@
 shims over the engines and sim packages.
 """
 from . import (  # noqa: F401
+    cluster,
     engines,
     experiment,
     latency_model,
@@ -67,4 +68,8 @@ from .experiment import (  # noqa: F401
     Scenario,
     default_scenario,
     run_scenario,
+)
+from .cluster import (  # noqa: F401
+    ClusterSpec,
+    sweep_cluster,
 )

@@ -137,14 +137,22 @@ class Scenario:
     # NOTE: ArrivalSpec fields are SI -- ``rate`` in ops/sec, ``period``
     # and ``deadline`` in *seconds* -- unlike the scenario's _us fields.
     arrival: dict = field(default_factory=dict)
+    # sharded fleet: a ClusterSpec.to_dict() (empty = single host).  The
+    # scenario's device fields describe each *node*; ``cluster`` adds the
+    # fleet shape on top (node count, partitioning, route hop, per-node
+    # overrides) -- see repro.core.cluster.
+    cluster: dict = field(default_factory=dict)
     name: str = ""
 
     def __post_init__(self):
         for f in ("engine_kwargs", "workload_kwargs", "latencies_us",
-                  "thread_candidates", "arrival"):
+                  "thread_candidates", "arrival", "cluster"):
             object.__setattr__(self, f, _norm(getattr(self, f)))
         if self.arrival:
             ArrivalSpec.from_dict(dict(self.arrival))   # validate eagerly
+        if self.cluster:
+            from .cluster import ClusterSpec
+            ClusterSpec.from_dict(dict(self.cluster))   # validate eagerly
         if not self.latencies_us or not self.thread_candidates:
             raise ValueError(
                 "Scenario sweep axes must be non-empty "
@@ -204,6 +212,14 @@ class Scenario:
         for the closed-loop driver."""
         return (ArrivalSpec.from_dict(dict(self.arrival))
                 if self.arrival else None)
+
+    def cluster_spec(self):
+        """The :class:`~repro.core.cluster.ClusterSpec`, or ``None`` for
+        the plain single-host path."""
+        if not self.cluster:
+            return None
+        from .cluster import ClusterSpec
+        return ClusterSpec.from_dict(dict(self.cluster))
 
     # -- serialization -------------------------------------------------------
 
@@ -275,12 +291,18 @@ class SweepRow:
     # miss_rate, source ("exact" | "hist"), offered_load (ops/sec, None
     # closed loop) and achieved_load (measured throughput).
     tail: dict | None = None
+    # Cluster runs only: one dict per node (node index, op-stream share,
+    # measured ops, throughput, virtual time, and the node's own tail
+    # summary in the client frame).  None on single-host rows.
+    nodes: tuple | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "L_us", _norm(self.L_us))
         object.__setattr__(self, "per_thread", _norm(self.per_thread))
         if self.tail is not None:
             object.__setattr__(self, "tail", dict(self.tail))
+        if self.nodes is not None:
+            object.__setattr__(self, "nodes", _norm(tuple(self.nodes)))
 
     @property
     def mean_latency_us(self) -> float:
@@ -451,14 +473,29 @@ class Experiment:
         p = tr.op_params(store.times, P=s.P, T_sw=s.T_sw_us * US)
         cfg = s.sim_config()
         arrival = s.arrival_spec()
-        pts = sweep_latency(
-            cfg, tr.trace, s.latencies_sec(), s.thread_candidates,
-            n_ops=s.n_ops, processes=o.processes, cache_dir=o.cache_dir,
-            collect_latency=o.collect_latency, adaptive=o.adaptive,
-            backend=o.backend, use_pallas=o.use_pallas, unroll=o.unroll,
-            substeps=o.substeps, host_devices=o.host_devices,
-            arrival=arrival, collect_percentiles=o.collect_percentiles,
-        )
+        cl = s.cluster_spec()
+        if cl is not None:
+            from .cluster import sweep_cluster
+            # Trace ops carry no keys; the partitioner needs them, and the
+            # post-warmup workload slice aligns 1:1 with the trace ops.
+            n_warm = int(len(wl) * s.warmup_frac)
+            pts = sweep_cluster(
+                cfg, tr.trace, wl.keys[n_warm:], wl.is_write[n_warm:], cl,
+                s.latencies_sec(), s.thread_candidates, n_ops=s.n_ops,
+                backend=o.backend, collect_latency=o.collect_latency,
+                collect_percentiles=o.collect_percentiles, arrival=arrival,
+                use_pallas=o.use_pallas, unroll=o.unroll,
+                substeps=o.substeps, host_devices=o.host_devices,
+            )
+        else:
+            pts = sweep_latency(
+                cfg, tr.trace, s.latencies_sec(), s.thread_candidates,
+                n_ops=s.n_ops, processes=o.processes, cache_dir=o.cache_dir,
+                collect_latency=o.collect_latency, adaptive=o.adaptive,
+                backend=o.backend, use_pallas=o.use_pallas, unroll=o.unroll,
+                substeps=o.substeps, host_devices=o.host_devices,
+                arrival=arrival, collect_percentiles=o.collect_percentiles,
+            )
         # Eq. 14 outer IO caps for the model column, matching the scenario's
         # declared device pool (aggregate over the n_ssd per-device rates;
         # 0 disables a cap, like in the simulator).
@@ -467,8 +504,25 @@ class Experiment:
             cap_inv = max(cap_inv, p.S / (s.n_ssd * s.R_io))
         if s.B_io > 0:
             cap_inv = max(cap_inv, p.S * cfg.A_io / (s.n_ssd * s.B_io))
+        # Cluster fleet model: the hottest shard saturates first, so the
+        # fleet tops out at min over nodes of C_k / w_k (node capacity
+        # from Eq. 14 with its own device overrides, over its op share).
+        shares = None
+        if cl is not None and pts:
+            shares = []
+            for nc in pts[0].nodes:
+                if nc.share <= 0.0:
+                    continue
+                ncfg = cl.node_config(cfg, nc.node)
+                ci = 0.0
+                if ncfg.R_io > 0:
+                    ci = max(ci, p.S / (ncfg.n_ssd * ncfg.R_io))
+                if ncfg.B_io > 0:
+                    ci = max(ci, p.S * ncfg.A_io / (ncfg.n_ssd * ncfg.B_io))
+                shares.append((nc.share, ci))
         rows = tuple(
-            _make_row(l_us, pt, p, cap_inv, o.collect_latency, arrival)
+            _make_row(l_us, pt, p, cap_inv, o.collect_latency, arrival,
+                      shares=shares, nodes=_node_dicts(pt, arrival))
             for l_us, pt in zip(s.latencies_us, pts)
         )
         wname, _ = s.resolved_workload()
@@ -488,11 +542,11 @@ class Experiment:
         )
 
 
-def _tail_dict(pt: SweepPoint, arrival: ArrivalSpec | None) -> dict | None:
-    """Flatten a cell's :class:`LatencySummary` into the JSON-friendly
-    ``SweepRow.tail`` mapping (microseconds; NaN percentiles from all-missed
-    cells become ``None`` so artifacts round-trip through strict JSON)."""
-    summ = pt.result.latency_summary
+def _summary_tail(summ, offered: float | None,
+                  achieved: float) -> dict | None:
+    """Flatten a :class:`LatencySummary` into the JSON-friendly tail
+    mapping (microseconds; NaN percentiles from all-missed cells become
+    ``None`` so artifacts round-trip through strict JSON)."""
     if summ is None:
         return None
 
@@ -508,20 +562,54 @@ def _tail_dict(pt: SweepPoint, arrival: ArrivalSpec | None) -> dict | None:
         "missed": int(summ.missed),
         "miss_rate": float(summ.miss_rate),
         "source": summ.source,
-        "offered_load": (
-            float(arrival.offered_rate) if arrival is not None else None),
-        "achieved_load": float(pt.throughput),
+        "offered_load": offered,
+        "achieved_load": float(achieved),
     }
 
 
+def _tail_dict(pt: SweepPoint, arrival: ArrivalSpec | None) -> dict | None:
+    return _summary_tail(
+        pt.result.latency_summary,
+        float(arrival.offered_rate) if arrival is not None else None,
+        pt.throughput)
+
+
+def _node_dicts(pt: SweepPoint,
+                arrival: ArrivalSpec | None) -> tuple | None:
+    """Per-node breakdown of a cluster point as JSON-friendly dicts (a
+    node's offered load is the fleet offered rate times its op share)."""
+    nodes = getattr(pt, "nodes", None)
+    if not nodes:
+        return None
+    out = []
+    for nc in nodes:
+        offered = (float(arrival.offered_rate) * nc.share
+                   if arrival is not None else None)
+        out.append({
+            "node": int(nc.node),
+            "share": float(nc.share),
+            "n_ops": int(nc.n_ops),
+            "throughput": float(nc.throughput),
+            "time": float(nc.time),
+            "tail": _summary_tail(nc.summary, offered, nc.throughput),
+        })
+    return tuple(out)
+
+
 def _make_row(l_us, pt: SweepPoint, p: OpParams, cap_inv: float,
-              collected: bool, arrival: ArrivalSpec | None = None) -> SweepRow:
+              collected: bool, arrival: ArrivalSpec | None = None,
+              shares=None, nodes=None) -> SweepRow:
     # Mixtures are fed to the closed-form model as their expected latency
     # (the model takes a scalar L; the simulator samples the real mixture).
     # cap_inv is the Eq. 14 device-cap floor on reciprocal throughput, so
     # IOPS/bandwidth-capped scenarios get a model the sim can actually meet.
+    # shares (cluster runs) replaces it with the hottest-shard bound
+    # min_k C_k / w_k over (op share, per-node cap floor) pairs.
     rev = float(theta_prob_inv(np.array([_expected_us(l_us) * US]), p)[0])
-    model = 1.0 / max(rev, cap_inv)
+    if shares is None:
+        model = 1.0 / max(rev, cap_inv)
+    else:
+        model = min((1.0 / max(rev, ci)) / w for w, ci in shares)
     return SweepRow(
         L_us=l_us,
         n_threads=pt.n_threads,
@@ -531,6 +619,7 @@ def _make_row(l_us, pt: SweepPoint, p: OpParams, cap_inv: float,
         mean_op_latency_us=(
             float(pt.result.mean_op_latency / US) if collected else None),
         tail=_tail_dict(pt, arrival),
+        nodes=nodes,
     )
 
 

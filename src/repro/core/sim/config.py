@@ -41,6 +41,12 @@ class SimConfig:
                                   # round-robin in submission order
     L_switch: float = 0.0         # CXL/PCIe-switch fan-out hop added to every
                                   # IO when the device pool hangs off a switch
+    io_degrade: float = 1.0       # L_io multiplier for IOs submitted at
+                                  # now >= T_degrade (1.0 disables) -- models a
+                                  # device whose clocks slow mid-run (a failing
+                                  # SSD, a GC storm, a degraded cluster node)
+    T_degrade: float = 0.0        # virtual-time onset (seconds) of io_degrade;
+                                  # 0.0 degrades the whole run
     # Contention
     T_lock: float = 0.0
     seed: int = 0
@@ -53,6 +59,12 @@ class SimConfig:
             raise ValueError(f"n_threads must be >= 1, got {self.n_threads}")
         if self.T_lock < 0:
             raise ValueError(f"T_lock must be >= 0, got {self.T_lock}")
+        if self.io_degrade <= 0:
+            raise ValueError(
+                f"io_degrade must be > 0, got {self.io_degrade}")
+        if self.T_degrade < 0:
+            raise ValueError(
+                f"T_degrade must be >= 0, got {self.T_degrade}")
 
 
 @dataclass

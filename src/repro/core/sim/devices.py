@@ -66,7 +66,8 @@ class SSDClocks:
     """
 
     __slots__ = ("R_io", "B_io", "A_io", "L_io", "jitter", "L_switch",
-                 "n_ssd", "tok_next", "bw_next", "_rr")
+                 "n_ssd", "degrade", "T_degrade", "tok_next", "bw_next",
+                 "_rr")
 
     def __init__(self, cfg: SimConfig):
         if cfg.n_ssd < 1:
@@ -78,6 +79,8 @@ class SSDClocks:
         self.jitter = cfg.L_io_jitter
         self.L_switch = cfg.L_switch
         self.n_ssd = cfg.n_ssd
+        self.degrade = cfg.io_degrade
+        self.T_degrade = cfg.T_degrade
         self.tok_next = [0.0] * cfg.n_ssd
         self.bw_next = [0.0] * cfg.n_ssd
         self._rr = 0
@@ -92,7 +95,12 @@ class SSDClocks:
         if self.B_io > 0.0:
             svc = max(svc, self.bw_next[dev])
             self.bw_next[dev] = svc + self.A_io / self.B_io
+        # Mid-run degradation slows the device latency of every IO
+        # *submitted* at now >= T_degrade (submission time, not the gated
+        # start: a queued IO issued before the fault is still fast).
         lat_io = self.L_io
+        if self.degrade != 1.0 and now >= self.T_degrade:
+            lat_io = self.L_io * self.degrade
         if self.jitter > 0.0:
             lat_io *= 1.0 + self.jitter * (2.0 * rng.random() - 1.0)
         return svc + lat_io + self.L_switch

@@ -326,6 +326,9 @@ def simulate_compiled(
     eps = cfg.eps
     L_io = cfg.L_io
     jitter = cfg.L_io_jitter
+    io_degrade = cfg.io_degrade
+    T_degrade = cfg.T_degrade
+    has_degrade = io_degrade != 1.0
     R_io = cfg.R_io
     B_io = cfg.B_io
     A_io = cfg.A_io
@@ -495,7 +498,11 @@ def simulate_compiled(
                 if io_bw_next[dev] > svc:
                     svc = io_bw_next[dev]
                 io_bw_next[dev] = svc + A_io / B_io
+            # Mid-run degradation keys off the *submission* time (same
+            # rule as SSDClocks.submit, so the loops stay bit-identical).
             lat_io = L_io
+            if has_degrade and now >= T_degrade:
+                lat_io = L_io * io_degrade
             if jitter > 0.0:
                 lat_io *= 1.0 + jitter * (2.0 * rrandom() - 1.0)
             park_until = svc + lat_io + L_switch
@@ -591,6 +598,9 @@ def _simulate_compiled_multicore(
     eps = cfg.eps
     L_io = cfg.L_io
     jitter = cfg.L_io_jitter
+    io_degrade = cfg.io_degrade
+    T_degrade = cfg.T_degrade
+    has_degrade = io_degrade != 1.0
     R_io = cfg.R_io
     B_io = cfg.B_io
     A_io = cfg.A_io
@@ -779,7 +789,11 @@ def _simulate_compiled_multicore(
                 if io_bw_next[dev] > svc:
                     svc = io_bw_next[dev]
                 io_bw_next[dev] = svc + A_io / B_io
+            # Mid-run degradation keys off the *submission* time (same
+            # rule as SSDClocks.submit, so the loops stay bit-identical).
             lat_io = L_io
+            if has_degrade and now >= T_degrade:
+                lat_io = L_io * io_degrade
             if jitter > 0.0:
                 lat_io *= 1.0 + jitter * (2.0 * rrandom() - 1.0)
             park_until = svc + lat_io + L_switch

@@ -215,6 +215,10 @@ class GridResult:
     lat_max: np.ndarray | None = None
     lat_count: np.ndarray | None = None
     missed: np.ndarray | None = None
+    # Raw per-cell histogram counts, shaped (n_latencies, n_candidates,
+    # HIST_BINS) -- cluster sweeps sum these planes across nodes to build
+    # fleet-wide percentile summaries without re-running cells.
+    lat_hist: np.ndarray | None = None
 
     def result(self, li: int, ci: int) -> SimResult:
         """One cell as a :class:`SimResult` (no per-op latency columns --
@@ -283,6 +287,7 @@ def _make_flags(cfg: SimConfig) -> dict:
         has_bio=cfg.B_io > 0.0,
         has_bmem=cfg.B_mem > 0.0,
         has_lock=cfg.T_lock > 0.0,
+        has_degrade=cfg.io_degrade != 1.0,
     )
 
 
@@ -294,7 +299,8 @@ def _grid_body(kinds, durs, op_starts, op_ends, n_trace,
                T_max, P, n_ssd, steps, unroll, substeps, use_pallas,
                early_exit, n_cores,
                has_eps, has_rho, has_jitter, has_rio, has_bio, has_bmem,
-               has_lock, has_arr=False, has_lat=False, has_deadline=False):
+               has_lock, has_arr=False, has_lat=False, has_deadline=False,
+               has_degrade=False):
     """The (unjitted) grid program; ``_run_grid`` jits it, the host-device
     sharding path wraps it in ``shard_map`` over the cell axis first."""
     from repro.kernels import sched_step as sk
@@ -410,7 +416,7 @@ def _grid_body(kinds, durs, op_starts, op_ends, n_trace,
         n_u=n_u, n_ssd=n_ssd, has_eps=has_eps, has_rho=has_rho,
         has_jitter=has_jitter, has_rio=has_rio, has_bio=has_bio,
         has_bmem=has_bmem, has_lock=has_lock, has_arr=has_arr,
-        has_lat=has_lat, has_deadline=has_deadline,
+        has_lat=has_lat, has_deadline=has_deadline, has_degrade=has_degrade,
         onehot_updates=use_pallas, eager_wmin=use_pallas, n_cores=n_cores)
 
     if use_pallas:
@@ -483,7 +489,7 @@ _STATIC_GRID_ARGS = (
     "T_max", "P", "n_ssd", "steps", "unroll", "substeps", "use_pallas",
     "early_exit", "n_cores",
     "has_eps", "has_rho", "has_jitter", "has_rio", "has_bio", "has_bmem",
-    "has_lock", "has_arr", "has_lat", "has_deadline")
+    "has_lock", "has_arr", "has_lat", "has_deadline", "has_degrade")
 
 _run_grid = partial(jax.jit, static_argnames=_STATIC_GRID_ARGS)(_grid_body)
 
@@ -699,6 +705,8 @@ def sweep_grid(
         cfg.A_mem / cfg.B_mem if cfg.B_mem > 0.0 else 0.0,
         cfg.T_lock,
         deadline,
+        cfg.T_degrade,
+        cfg.io_degrade,
     )
     cohorts = _cohorts(source, candidates, n_ops, warmup_ops, cfg.n_cores,
                        bucket_threads)
@@ -715,6 +723,7 @@ def sweep_grid(
         lmax = np.empty(shape)
         lcount = np.empty(shape, dtype=np.int64)
         lmiss = np.empty(shape, dtype=np.int64)
+        lhist = np.empty(shape + (HIST_BINS,), dtype=np.int64)
     max_steps = 0
     steps_bound_cells = 0
     steps_run_cells = 0
@@ -800,6 +809,8 @@ def sweep_grid(
                 lcount[:, cols] = total.reshape(bshape)
                 lmiss[:, cols] = out["missed"].astype(
                     np.int64).reshape(bshape)
+                lhist[:, cols, :] = np.rint(out["lat_hist"]).astype(
+                    np.int64).reshape(bshape + (HIST_BINS,))
     return GridResult(
         throughput=thr,
         time=tim,
@@ -815,4 +826,5 @@ def sweep_grid(
         lat_max=lmax if has_lat else None,
         lat_count=lcount if has_lat else None,
         missed=lmiss if has_lat else None,
+        lat_hist=lhist if has_lat else None,
     )

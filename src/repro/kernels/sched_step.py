@@ -162,7 +162,7 @@ def unpack_span(span):
 
 def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
                  has_bio, has_bmem, has_lock, has_arr=False, has_lat=False,
-                 has_deadline=False, onehot_updates=False,
+                 has_deadline=False, has_degrade=False, onehot_updates=False,
                  eager_wmin=False, n_cores=1):
     """Build the scheduler substep body, specialized on the static config.
 
@@ -174,7 +174,8 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
     ``kd``/``se`` are the packed trace columns; ``arr`` the shared
     open-loop arrival timestamp vector (a 1-wide dummy when ``has_arr``
     is off); ``nthr_g`` the per-cell thread counts (int32, read only when
-    ``has_arr``); ``dyn`` the tuple of dynamic scalars (deadline last).
+    ``has_arr``); ``dyn`` the tuple of dynamic scalars (the degrade pair
+    last).
 
     ``has_arr`` replays the loops' open-loop driver: op completions fetch
     the next arrival at the shared index ``n_cores * nthr_g + done``
@@ -188,6 +189,9 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
     :mod:`repro.core.sim.arrivals` for the binning and its error bound).
     ``has_deadline`` additionally classifies measured sojourns above
     ``dyn``'s deadline as missed (counted, excluded from the histogram).
+    ``has_degrade`` multiplies ``L_io`` by ``dyn``'s ``io_degrade`` for
+    IOs submitted at ``now >= T_degrade`` (mid-run device slowdown; same
+    submission-time rule as the loops' ``SSDClocks.submit``).
 
     ``onehot_updates`` switches the per-row thread-plane gathers/scatters
     to bit-identical one-hot select/merge forms (the Pallas kernel's
@@ -243,7 +247,7 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
     def substep(s, u, kd, se, arr, nthr_g, n_trace, L_mem_g, warm_g,
                 n_ops, dyn):
         (T_sw, eps, rho, L_dram, L_io, jitter, inv_R, cost_bw_io, L_switch,
-         cost_bmem, T_lock, deadline) = dyn
+         cost_bmem, T_lock, deadline, T_degrade, io_degrade) = dyn
         cf, ci, stamp, wake, pft, pf_slots = s[:6]
         si = 6
         if multicore:
@@ -481,8 +485,12 @@ def make_substep(*, n_u, n_ssd, has_eps, has_rho, has_jitter, has_rio,
             io_out = (tok2d, bw2d)
             io_rr = io_rr + park
         lat_io = L_io
+        if has_degrade:
+            # Same submission-time rule as the loops: the row's current
+            # time decides whether this IO pays the degraded latency.
+            lat_io = jnp.where(now >= T_degrade, L_io * io_degrade, L_io)
         if has_jitter:
-            lat_io = L_io * (1.0 + jitter * (2.0 * u[next(un)] - 1.0))
+            lat_io = lat_io * (1.0 + jitter * (2.0 * u[next(un)] - 1.0))
         park_until = svc + lat_io + L_switch
 
         # -- issue the next suboperation's prefetch (P-deep window) ---------

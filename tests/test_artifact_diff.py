@@ -1,0 +1,139 @@
+"""``tools/artifact_diff.py`` -- two RunArtifact JSONs, a threshold, an
+exit code.
+
+Contract: identical artifacts pass ``--exact`` (exit 0); a relative
+difference above ``--max-rel`` (or ``--max-rel-tail`` for percentiles)
+exits 1; structural mismatches -- diverging latency axes, node counts, or
+winning thread counts -- are never a tolerance question (thread counts
+exit 2, the rest exit 1 with a FAIL message).  The tool is stdlib-only,
+so the test drives its real ``main()`` through ``sys.argv``.
+"""
+import copy
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+spec = importlib.util.spec_from_file_location(
+    "artifact_diff", ROOT / "tools" / "artifact_diff.py")
+artifact_diff = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(artifact_diff)
+
+
+def _row(L=2.0, thr=100_000.0, model=108_000.0, n_threads=8,
+         tail=None, nodes=None):
+    r = {"L_us": L, "throughput": thr, "model_throughput": model,
+         "n_threads": n_threads}
+    if tail is not None:
+        r["tail"] = tail
+    if nodes is not None:
+        r["nodes"] = nodes
+    return r
+
+
+def _cluster_rows():
+    tail = {"p50_us": 40.0, "p90_us": 90.0, "p99_us": 220.0}
+    nodes = [
+        {"node": 0, "throughput": 60_000.0,
+         "tail": {"p50_us": 35.0, "p90_us": 80.0, "p99_us": 200.0}},
+        {"node": 1, "throughput": 40_000.0,
+         "tail": {"p50_us": 50.0, "p90_us": 110.0, "p99_us": 260.0}},
+    ]
+    return [_row(L=2.0, tail=tail, nodes=nodes),
+            _row(L=5.0, thr=80_000.0, model=85_000.0, tail=tail,
+                 nodes=nodes)]
+
+
+@pytest.fixture
+def write_pair(tmp_path):
+    def _write(rows_a, rows_b):
+        a, b = tmp_path / "a.json", tmp_path / "b.json"
+        a.write_text(json.dumps({"rows": rows_a}))
+        b.write_text(json.dumps({"rows": rows_b}))
+        return str(a), str(b)
+    return _write
+
+
+def _run(monkeypatch, argv):
+    monkeypatch.setattr("sys.argv", ["artifact_diff.py", *argv])
+    try:
+        artifact_diff.main()
+    except SystemExit as e:
+        if e.code in (None, 0):
+            return 0
+        return e.code if isinstance(e.code, int) else 1
+    return 0
+
+
+class TestExitCodes:
+    def test_identical_artifacts_pass_exact(self, write_pair, monkeypatch):
+        rows = _cluster_rows()
+        a, b = write_pair(rows, copy.deepcopy(rows))
+        assert _run(monkeypatch, [a, b, "--exact"]) == 0
+
+    def test_report_only_never_fails_on_drift(self, write_pair,
+                                              monkeypatch):
+        rows_b = _cluster_rows()
+        rows_b[0]["throughput"] *= 1.5
+        a, b = write_pair(_cluster_rows(), rows_b)
+        assert _run(monkeypatch, [a, b]) == 0            # no threshold
+
+    def test_throughput_drift_breaches_max_rel(self, write_pair,
+                                               monkeypatch):
+        rows_b = _cluster_rows()
+        # scale model with throughput so only the throughput axis drifts
+        # (model *error* is itself a compared quantity)
+        rows_b[0]["throughput"] *= 1.02
+        rows_b[0]["model_throughput"] *= 1.02
+        a, b = write_pair(_cluster_rows(), rows_b)
+        assert _run(monkeypatch, [a, b, "--max-rel", "0.05"]) == 0
+        assert _run(monkeypatch, [a, b, "--max-rel", "0.01"]) == 1
+
+    def test_tail_bound_is_separate(self, write_pair, monkeypatch):
+        rows_b = _cluster_rows()
+        rows_b[0]["tail"] = dict(rows_b[0]["tail"], p99_us=240.0)  # ~9%
+        a, b = write_pair(_cluster_rows(), rows_b)
+        assert _run(monkeypatch, [a, b, "--max-rel", "0.01",
+                                  "--max-rel-tail", "0.2"]) == 0
+        assert _run(monkeypatch, [a, b, "--max-rel", "0.01"]) == 1
+
+    def test_per_node_drift_is_compared(self, write_pair, monkeypatch):
+        rows_b = _cluster_rows()
+        rows_b[1]["nodes"][1]["throughput"] *= 1.1    # fleet fields equal
+        a, b = write_pair(_cluster_rows(), rows_b)
+        assert _run(monkeypatch, [a, b, "--max-rel", "0.05"]) == 1
+
+    def test_thread_count_mismatch_exits_2(self, write_pair, monkeypatch):
+        rows_b = _cluster_rows()
+        rows_b[0]["n_threads"] = 16
+        a, b = write_pair(_cluster_rows(), rows_b)
+        assert _run(monkeypatch, [a, b]) == 2
+
+    def test_latency_axis_mismatch_fails(self, write_pair, monkeypatch):
+        rows_b = _cluster_rows()
+        rows_b[1]["L_us"] = 8.0
+        a, b = write_pair(_cluster_rows(), rows_b)
+        assert _run(monkeypatch, [a, b]) == 1
+
+    def test_node_count_mismatch_fails(self, write_pair, monkeypatch):
+        rows_b = _cluster_rows()
+        del rows_b[0]["nodes"][1]
+        a, b = write_pair(_cluster_rows(), rows_b)
+        assert _run(monkeypatch, [a, b]) == 1
+
+    def test_unreadable_or_rowless_artifact_fails(self, tmp_path,
+                                                  monkeypatch):
+        good = tmp_path / "good.json"
+        good.write_text(json.dumps({"rows": _cluster_rows()}))
+        empty = tmp_path / "empty.json"
+        empty.write_text(json.dumps({"rows": []}))
+        assert _run(monkeypatch, [str(good), str(tmp_path / "nope")]) == 1
+        assert _run(monkeypatch, [str(good), str(empty)]) == 1
+
+    def test_mixture_labels_align(self, write_pair, monkeypatch):
+        row = _row(L=[[1.0, 0.7], [10.0, 0.3]])
+        a, b = write_pair([row], [copy.deepcopy(row)])
+        assert _run(monkeypatch, [a, b, "--exact"]) == 0

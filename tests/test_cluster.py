@@ -1,0 +1,329 @@
+"""Sharded-cluster layer: spec, partitioners, degeneracy, fleets.
+
+Contract, strongest first:
+
+  1. The partitioners are *pure numpy functions* of (keys, spec), shared
+     by every backend (property-tested): hash partitioning balanced over
+     the key space, range partitioning monotone with near-equal widths,
+     replica sets distinct ring prefixes, op assignment deterministic
+     with writes pinned to the primary.
+  2. Degeneracy: a trivial ``ClusterSpec`` (one node, replication 1, no
+     route hop, no overrides) is *byte-identical* to the plain
+     single-host path for every registered engine on both loop backends
+     -- same throughput, same winner, same tails -- and bit-identical on
+     the jax grid (the cluster layer rides on the single-host
+     equivalence proofs).
+  3. Mid-run degrade semantics: ``io_degrade=g`` with ``T_degrade=0`` is
+     bitwise the same run as ``L_io * g``, and an onset beyond the run
+     horizon is bitwise the same as no degrade at all, on both loops.
+  4. A real fleet agrees across backends: 4-node hot-shard sweep, jax
+     fleet throughput within 1% of the loop and fleet tails within the
+     histogram binning bound; op-stream shares identical (pure numpy).
+  5. Spec validation rejects malformed fleets eagerly; specs and cluster
+     artifacts JSON-round-trip.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import workloads
+from repro.core.cluster import (
+    ClusterSpec,
+    assign_ops,
+    replica_set,
+    shard_of,
+    sweep_cluster,
+)
+from repro.core.engines import available_engines, get_engine, run_trace
+from repro.core.experiment import (
+    Experiment,
+    RunArtifact,
+    RunOptions,
+    Scenario,
+)
+from repro.core.sim import SimConfig, US, simulate, simulate_compiled
+
+from _hypothesis_support import given, settings, st  # optional shim
+
+ENGINES = sorted({cls.engine_name for cls in available_engines().values()})
+
+
+# -- 1. partitioners ---------------------------------------------------------
+
+
+class TestPartitioners:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 12), st.integers(1, 8))
+    def test_hash_balanced_over_key_space(self, n_nodes, scale):
+        # Uniform coverage of the key space must land near-uniformly on
+        # the shards -- the property that makes "hash" the scattered
+        # partition (skew then comes only from the workload's key
+        # popularity, never from the partitioner itself).
+        n_keys = 512 * n_nodes * scale
+        spec = ClusterSpec(n_nodes=n_nodes, partition="hash")
+        shard = shard_of(np.arange(n_keys), spec, n_keys)
+        counts = np.bincount(shard, minlength=n_nodes)
+        assert counts.sum() == n_keys
+        assert counts.min() > 0
+        assert counts.max() <= 2 * n_keys / n_nodes
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 12), st.integers(1, 300))
+    def test_range_monotone_near_equal_widths(self, n_nodes, extra):
+        n_keys = n_nodes + extra
+        spec = ClusterSpec(n_nodes=n_nodes, partition="range")
+        shard = shard_of(np.arange(n_keys), spec, n_keys)
+        assert shard[0] == 0 and shard[-1] == n_nodes - 1
+        assert np.all(np.diff(shard) >= 0)          # contiguous ranges
+        counts = np.bincount(shard, minlength=n_nodes)
+        assert counts.min() >= n_keys // n_nodes
+        assert counts.max() <= -(-n_keys // n_nodes)  # ceil
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 12), st.integers(0, 11))
+    def test_replica_set_is_distinct_ring_prefix(self, n_nodes, shard):
+        shard %= n_nodes
+        for repl in range(1, n_nodes + 1):
+            spec = ClusterSpec(n_nodes=n_nodes, replication=repl)
+            rs = replica_set(shard, spec)
+            assert len(rs) == repl == len(set(rs))
+            assert rs[0] == shard
+            assert all(0 <= n < n_nodes for n in rs)
+            assert rs == tuple((shard + j) % n_nodes for j in range(repl))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_assignment_deterministic_writes_at_primary(self, seed):
+        rng = np.random.default_rng(seed)
+        n_keys, n_ops = 400, 300
+        keys = rng.integers(0, n_keys, n_ops)
+        is_write = rng.random(n_ops) < 0.3
+        spec = ClusterSpec(n_nodes=5, replication=3,
+                           replica_policy="spread")
+        node = assign_ops(keys, is_write, spec, n_keys)
+        # deterministic: a second call is byte-identical
+        assert node.dtype == np.int64
+        assert np.array_equal(node,
+                              assign_ops(keys, is_write, spec, n_keys))
+        assert np.all((0 <= node) & (node < spec.n_nodes))
+        shard = shard_of(keys, spec, n_keys)
+        # writes never leave the primary; spread reads stay on a replica
+        assert np.array_equal(node[is_write], shard[is_write])
+        for i in np.flatnonzero(~is_write):
+            assert node[i] in replica_set(int(shard[i]), spec)
+        # replication=1 spread degenerates to the primary assignment
+        one = dataclasses.replace(spec, replication=1)
+        assert np.array_equal(assign_ops(keys, is_write, one, n_keys),
+                              shard)
+
+    def test_migrate_reassigns_only_tail_of_stream(self):
+        n_keys, n_ops = 200, 400
+        keys = np.arange(n_ops) % n_keys
+        is_write = np.zeros(n_ops, dtype=bool)
+        spec = ClusterSpec(n_nodes=4, migrate={"shard": 0, "to": 2,
+                                               "at_frac": 0.5})
+        shard = shard_of(keys, spec, n_keys)
+        node = assign_ops(keys, is_write, spec, n_keys)
+        cut = n_ops // 2
+        assert np.array_equal(node[:cut], shard[:cut])
+        moved = shard[cut:] == 0
+        assert moved.any()
+        assert np.all(node[cut:][moved] == 2)
+        assert np.array_equal(node[cut:][~moved], shard[cut:][~moved])
+
+
+# -- 2. spec validation + round-trip -----------------------------------------
+
+
+class TestClusterSpec:
+    def test_round_trip_and_key(self):
+        spec = ClusterSpec(
+            n_nodes=4, partition="range", replication=2,
+            replica_policy="spread", L_route_us=5.0,
+            node_overrides={"1": {"io_degrade": 4.0,
+                                  "T_degrade_us": 2000.0}},
+            migrate={"shard": 0, "to": 2, "at_frac": 0.5})
+        assert ClusterSpec.from_dict(spec.to_dict()) == spec
+        assert spec.key() == ClusterSpec.from_dict(spec.to_dict()).key()
+        assert not spec.is_trivial
+        assert ClusterSpec().is_trivial
+        assert not ClusterSpec(L_route_us=1.0).is_trivial
+
+    @pytest.mark.parametrize("kw", [
+        {"n_nodes": 0},
+        {"partition": "modulo"},
+        {"n_nodes": 2, "replication": 3},
+        {"replica_policy": "nearest"},
+        {"L_route_us": -1.0},
+        {"n_nodes": 2, "node_overrides": {"9": {"R_io": 1e5}}},
+        {"node_overrides": {"x": {"R_io": 1e5}}},
+        {"node_overrides": {"0": {"bogus": 1.0}}},
+        {"node_overrides": {"0": {"R_io": "fast"}}},
+        {"n_nodes": 2, "migrate": {"shard": 0}},
+        {"n_nodes": 2, "migrate": {"shard": 0, "to": 0, "at_frac": 0.5}},
+        {"n_nodes": 2, "migrate": {"shard": 0, "to": 1, "at_frac": 2.0}},
+        {"n_nodes": 2, "migrate": {"shard": 5, "to": 1, "at_frac": 0.5}},
+    ])
+    def test_validation_rejects(self, kw):
+        with pytest.raises(ValueError):
+            ClusterSpec(**kw)
+
+    def test_from_dict_rejects_unknown_fields(self):
+        with pytest.raises(ValueError, match="unknown ClusterSpec field"):
+            ClusterSpec.from_dict({"n_nodes": 2, "quorum": 1})
+
+    def test_node_config_overrides_and_seed(self):
+        cfg = SimConfig(P=8, seed=7)
+        spec = ClusterSpec(
+            n_nodes=3,
+            node_overrides={"1": {"L_io_us": 100.0, "io_degrade": 2.0,
+                                  "T_degrade_us": 500.0, "n_ssd": 2}})
+        assert spec.node_config(cfg, 0) is cfg       # identity on node 0
+        c1 = spec.node_config(cfg, 1)
+        assert c1.L_io == pytest.approx(100.0 * US)
+        assert c1.io_degrade == 2.0
+        assert c1.T_degrade == pytest.approx(500.0 * US)
+        assert c1.n_ssd == 2 and c1.seed == 8
+        c2 = spec.node_config(cfg, 2)
+        assert c2.seed == 9 and c2.L_io == cfg.L_io
+
+
+# -- 3. degrade semantics ----------------------------------------------------
+
+
+def _hash_trace(n_keys=1_500, n_wl_ops=700, seed=3):
+    store = get_engine("hash-index")(n_keys, seed=6)
+    wl = workloads.create_workload("uniform", n_keys, n_wl_ops,
+                                   read_write=(1, 0), seed=seed)
+    return run_trace(store, wl)
+
+
+class TestDegradeSemantics:
+    def test_degrade_from_t0_is_lio_scaling_bitwise(self):
+        tr = _hash_trace()
+        base = dict(P=10, seed=7, n_threads=12, n_ssd=2, R_io=250e3)
+        deg = SimConfig(**base, io_degrade=4.0, T_degrade=0.0)
+        sc4 = SimConfig(**base, L_io=4 * SimConfig().L_io)
+        # a fresh source per run: as_source() carries replay-cursor state
+        for run in (lambda c: simulate_compiled(c, tr.trace, 400, None,
+                                                False),
+                    lambda c: simulate(c, tr.trace.as_source(), 400, None,
+                                       False)):
+            a, b = run(deg), run(sc4)
+            assert a.throughput == b.throughput      # bitwise, incl. jitter
+            assert a.time == b.time
+
+    def test_degrade_beyond_horizon_is_inert_bitwise(self):
+        tr = _hash_trace()
+        base = dict(P=10, seed=7, n_threads=12, n_ssd=2, R_io=250e3)
+        late = SimConfig(**base, io_degrade=4.0, T_degrade=10.0)
+        plain = SimConfig(**base)
+        for run in (lambda c: simulate_compiled(c, tr.trace, 400, None,
+                                                False),
+                    lambda c: simulate(c, tr.trace.as_source(), 400, None,
+                                       False)):
+            a, b = run(late), run(plain)
+            assert a.throughput == b.throughput
+            assert a.time == b.time
+
+
+# -- 4. degeneracy: trivial spec == single-host path -------------------------
+
+
+def _tiny_scenario(engine, **kw):
+    base = dict(engine=engine, workload="zipf",
+                workload_kwargs={"exponent": 0.9, "read_write": (1, 0),
+                                 "seed": 3},
+                n_keys=1_500, n_wl_ops=800, n_ops=250,
+                latencies_us=(2.0,), thread_candidates=(8,))
+    base.update(kw)
+    return Scenario(**base)
+
+
+class TestDegeneracy:
+    @pytest.mark.parametrize("engine", ENGINES)
+    @pytest.mark.parametrize("backend", ["loop", "generic"])
+    def test_trivial_spec_byte_identical_loops(self, engine, backend):
+        # The plain path has no "generic" backend; the generic and
+        # compiled loops are bit-identical by contract, so the trivial
+        # cluster on either loop must match the plain compiled loop.
+        scenario = _tiny_scenario(
+            engine, arrival={"kind": "poisson", "rate": 120e3, "seed": 5})
+        plain = Experiment(scenario, RunOptions(
+            backend="loop", collect_percentiles=True)).run()
+        triv = Experiment(
+            dataclasses.replace(scenario, cluster={"n_nodes": 1}),
+            RunOptions(backend=backend, collect_percentiles=True)).run()
+        assert len(plain.rows) == len(triv.rows)
+        for ra, rb in zip(plain.rows, triv.rows):
+            assert ra.throughput == rb.throughput    # byte-for-byte
+            assert ra.n_threads == rb.n_threads
+            assert ra.per_thread == rb.per_thread
+            assert ra.tail == rb.tail
+            assert rb.nodes is not None and len(rb.nodes) == 1
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_trivial_spec_bit_identical_jax(self, engine):
+        scenario = _tiny_scenario(engine, n_ops=150)
+        opts = RunOptions(backend="jax")
+        plain = Experiment(scenario, opts).run()
+        triv = Experiment(
+            dataclasses.replace(scenario, cluster={"n_nodes": 1}),
+            opts).run()
+        for ra, rb in zip(plain.rows, triv.rows):
+            assert ra.throughput == rb.throughput
+            assert ra.n_threads == rb.n_threads
+
+
+# -- 5. fleets: cross-backend agreement + artifact shape ---------------------
+
+
+FLEET = {"n_nodes": 4, "partition": "hash", "L_route_us": 5.0,
+         "replication": 2, "replica_policy": "spread"}
+
+
+class TestFleet:
+    def test_sweep_cluster_fleet_is_sum_of_nodes(self):
+        tr = _hash_trace(n_wl_ops=900)
+        wl = workloads.create_workload("uniform", 1_500, 900,
+                                       read_write=(1, 0), seed=3)
+        # the trace drops warmup ops; align the key stream with it
+        keys = wl.keys[-tr.trace.n_ops:]
+        is_write = wl.is_write[-tr.trace.n_ops:]
+        cfg = SimConfig(P=10, seed=7, n_ssd=2, R_io=250e3)
+        spec = ClusterSpec(**{k: v for k, v in FLEET.items()})
+        pts = sweep_cluster(cfg, tr.trace, keys, is_write, spec,
+                            [2.0 * US], (8,), n_ops=300)
+        (pt,) = pts
+        assert len(pt.nodes) == spec.n_nodes
+        active = [nc for nc in pt.nodes if nc.n_ops]
+        assert sum(nc.share for nc in active) == pytest.approx(1.0)
+        assert pt.result.throughput == pytest.approx(
+            sum(nc.throughput for nc in active))
+        assert sum(nc.n_ops for nc in pt.nodes) == 300
+
+    def test_fleet_loop_vs_jax_within_bounds(self):
+        scenario = _tiny_scenario(
+            "hash-index", n_wl_ops=1_600, n_ops=800,
+            workload_kwargs={"exponent": 1.2, "read_write": (1, 0),
+                             "seed": 3},
+            cluster=dict(FLEET),
+            arrival={"kind": "poisson", "rate": 300e3, "seed": 11})
+        loop = Experiment(scenario, RunOptions(
+            backend="loop", collect_percentiles=True)).run()
+        grid = Experiment(scenario, RunOptions(
+            backend="jax", collect_percentiles=True)).run()
+        for ra, rb in zip(loop.rows, grid.rows):
+            assert ra.n_threads == rb.n_threads
+            rel = abs(ra.throughput - rb.throughput) / ra.throughput
+            assert rel <= 0.01
+            # shares are pure numpy -- identical, not just close
+            assert [n["share"] for n in ra.nodes] == \
+                   [n["share"] for n in rb.nodes]
+            for f in ("p50_us", "p99_us"):
+                rel_t = (abs(ra.tail[f] - rb.tail[f])
+                         / max(ra.tail[f], rb.tail[f]))
+                assert rel_t <= 0.10, (f, ra.tail, rb.tail)
+        # cluster artifacts (fleet tail + per-node dicts) round-trip
+        assert RunArtifact.from_json(loop.to_json()) == loop

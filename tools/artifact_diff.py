@@ -1,0 +1,177 @@
+#!/usr/bin/env python
+"""Compare two RunArtifact JSONs row by row, with a threshold exit code.
+
+A :class:`~repro.core.experiment.RunArtifact` is the serialized result of
+one scenario run (sweep table + model predictions + tail summaries).  Two
+artifacts of the *same scenario* should agree: across backends within the
+documented tolerance, across machines exactly (the simulator is
+deterministic in virtual time), across code changes within whatever bound
+the change claims.  This tool makes that check scriptable::
+
+    python tools/artifact_diff.py A.json B.json
+        Report per-row relative differences (throughput, model error,
+        tail percentiles); exit 0.
+
+    python tools/artifact_diff.py A.json B.json --max-rel 0.01
+        Additionally exit 1 if any compared quantity differs by more
+        than 1% relative (--max-rel-tail overrides the bound for tail
+        percentiles, which carry binning error on the jax backend).
+
+    python tools/artifact_diff.py A.json B.json --exact
+        Exit 1 unless every compared row quantity is bit-identical
+        (loop-backend determinism checks).
+
+Rows are aligned by their latency label; artifacts whose latency axes or
+winning thread counts disagree exit 2 (structural mismatch -- thread
+counts are part of the operating point, not a tolerance question).
+Cluster artifacts additionally compare per-node throughput and tails.
+Stdlib-only, like the other ``tools/`` checkers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+TAIL_FIELDS = ("p50_us", "p90_us", "p99_us")
+
+
+def load_rows(path: str) -> list[dict]:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"artifact_diff: FAIL: {path}: unreadable or not JSON "
+                 f"({e})")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        sys.exit(f"artifact_diff: FAIL: {path}: not a RunArtifact "
+                 "(missing/empty rows)")
+    return rows
+
+
+def label(row: dict) -> str:
+    l_us = row["L_us"]
+    if isinstance(l_us, list):
+        return "Lmix" + "|".join(f"{lat:g}@{p:g}" for lat, p in l_us) + "us"
+    return f"L{l_us:g}us"
+
+
+def rel(a: float, b: float) -> float:
+    ref = max(abs(a), abs(b))
+    return abs(a - b) / ref if ref else 0.0
+
+
+class Diff:
+    """Accumulates compared quantities and the worst relative error."""
+
+    def __init__(self) -> None:
+        self.worst = 0.0
+        self.worst_what = "nothing compared"
+        self.n = 0
+
+    def add(self, what: str, a: float, b: float) -> float:
+        r = rel(a, b)
+        self.n += 1
+        if self.n == 1 or r > self.worst:
+            self.worst, self.worst_what = r, what
+        return r
+
+
+def diff_tails(what: str, ta: dict | None, tb: dict | None,
+               d: Diff, out: list[str]) -> None:
+    if ta is None or tb is None:
+        if (ta is None) != (tb is None):
+            out.append(f"  {what}: tail only in one artifact (skipped)")
+        return
+    parts = []
+    for f in TAIL_FIELDS:
+        va, vb = ta.get(f), tb.get(f)
+        if va is None or vb is None:
+            continue
+        r = d.add(f"{what} {f}", va, vb)
+        parts.append(f"{f} {va:g}/{vb:g} ({r:+.2%})")
+    if parts:
+        out.append(f"  {what}: " + "  ".join(parts))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("a", metavar="A.json")
+    ap.add_argument("b", metavar="B.json")
+    ap.add_argument("--max-rel", type=float, default=None, metavar="FRAC",
+                    help="exit 1 if any compared quantity differs by more "
+                         "than FRAC relative (default: report only)")
+    ap.add_argument("--max-rel-tail", type=float, default=None,
+                    metavar="FRAC",
+                    help="separate bound for tail percentiles (default: "
+                         "--max-rel; jax-backend tails carry ~2% binning "
+                         "error)")
+    ap.add_argument("--exact", action="store_true",
+                    help="require bit-identical compared quantities "
+                         "(equivalent to --max-rel 0)")
+    args = ap.parse_args()
+    if args.exact:
+        args.max_rel = 0.0
+        args.max_rel_tail = 0.0
+    if args.max_rel_tail is None:
+        args.max_rel_tail = args.max_rel
+
+    rows_a, rows_b = load_rows(args.a), load_rows(args.b)
+    by_label = {label(r): r for r in rows_b}
+    if [label(r) for r in rows_a] != list(by_label):
+        sys.exit(f"artifact_diff: FAIL: latency axes differ: "
+                 f"{[label(r) for r in rows_a]} vs {list(by_label)}")
+
+    d, d_tail = Diff(), Diff()
+    out: list[str] = []
+    for ra in rows_a:
+        rb = by_label[label(ra)]
+        if ra["n_threads"] != rb["n_threads"]:
+            print(f"artifact_diff: FAIL: {label(ra)}: winning thread "
+                  f"counts differ ({ra['n_threads']} vs "
+                  f"{rb['n_threads']})", file=sys.stderr)
+            sys.exit(2)
+        r_thr = d.add(f"{label(ra)} throughput",
+                      ra["throughput"], rb["throughput"])
+        err_a = rel(ra["throughput"], ra["model_throughput"])
+        err_b = rel(rb["throughput"], rb["model_throughput"])
+        out.append(
+            f"{label(ra)}: threads {ra['n_threads']}  "
+            f"throughput {ra['throughput']:.1f}/{rb['throughput']:.1f} "
+            f"({r_thr:+.2%})  model-err {err_a:.2%}/{err_b:.2%} "
+            f"({d.add(f'{label(ra)} model error', err_a, err_b):+.2%})")
+        diff_tails(f"{label(ra)} fleet tail", ra.get("tail"),
+                   rb.get("tail"), d_tail, out)
+        na, nb = ra.get("nodes") or [], rb.get("nodes") or []
+        if len(na) != len(nb):
+            sys.exit(f"artifact_diff: FAIL: {label(ra)}: node counts "
+                     f"differ ({len(na)} vs {len(nb)})")
+        for xa, xb in zip(na, nb):
+            w = f"{label(ra)} node {xa['node']}"
+            r_n = d.add(f"{w} throughput",
+                        xa["throughput"], xb["throughput"])
+            out.append(f"  {w}: throughput {xa['throughput']:.1f}/"
+                       f"{xb['throughput']:.1f} ({r_n:+.2%})")
+            diff_tails(f"{w} tail", xa.get("tail"), xb.get("tail"),
+                       d_tail, out)
+
+    for line in out:
+        print(f"artifact_diff: {line}")
+    print(f"artifact_diff: worst: {d.worst:.4%} ({d.worst_what}) over "
+          f"{d.n} quantities; worst tail: {d_tail.worst:.4%} "
+          f"({d_tail.worst_what}) over {d_tail.n}")
+    failed = []
+    if args.max_rel is not None and d.worst > args.max_rel:
+        failed.append(f"{d.worst_what}: {d.worst:.4%} > "
+                      f"{args.max_rel:.4%}")
+    if args.max_rel_tail is not None and d_tail.worst > args.max_rel_tail:
+        failed.append(f"{d_tail.worst_what}: {d_tail.worst:.4%} > "
+                      f"{args.max_rel_tail:.4%}")
+    if failed:
+        sys.exit("artifact_diff: FAIL: " + "; ".join(failed))
+    print("artifact_diff: OK")
+
+
+if __name__ == "__main__":
+    main()

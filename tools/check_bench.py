@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Validate checked-in benchmark measurements (schema + floors).
 
-Handles two measurement schemas, dispatched on the file's ``schema``
+Handles three measurement schemas, dispatched on the file's ``schema``
 field:
 
 ``repro.jax_grid_bench/v1`` (``BENCH_jax_grid.json``)
@@ -18,6 +18,16 @@ field:
     complete faster than ops arrive, beyond a small ramp tolerance),
     P99 >= P90 >= P50 > 0 per entry, miss_rate in [0, 1], and >= 2
     distinct offered loads so the load axis of the figure exists.
+
+``repro.cluster_bench/v1`` (``BENCH_cluster.json``)
+    Sharded-fleet measurements (see ``benchmarks/cluster_bench.py``).
+    Machine-independent invariants: ordered fleet percentiles, fleet
+    achieved load <= offered, per-node achieved <= offered on entries
+    without a migration event (a handover time-concentrates a node's
+    arrivals into a sub-window, so its windowed rate may legitimately
+    exceed its stream-averaged offered rate), per-entry node shares
+    summing to 1, count + missed == n_ops at both levels, and the
+    degraded-node scenario actually containing a degraded node.
 
 Two modes::
 
@@ -47,6 +57,7 @@ import sys
 
 SCHEMA = "repro.jax_grid_bench/v1"
 TAIL_SCHEMA = "repro.tail_latency_bench/v1"
+CLUSTER_SCHEMA = "repro.cluster_bench/v1"
 
 # Open-loop invariants: achieved may exceed offered only by the ramp
 # tolerance.  The first total_threads arrivals are backlogged at t=0
@@ -63,6 +74,30 @@ _TAIL_ENTRY_FIELDS = {
     "p50_us": (int, float), "p90_us": (int, float),
     "p99_us": (int, float), "max_us": (int, float), "count": int,
     "missed": int, "miss_rate": (int, float), "source": str,
+}
+
+# Cluster invariants: a node's sub-stream need not be time-homogeneous
+# (startup ramp plus skew drift concentrate its arrivals), so the
+# per-node bound is generous -- it catches frame/unit errors, not 20%
+# windowing.  Entries with migrate=true skip the per-node bound entirely.
+CLUSTER_RAMP_TOL = 1.25
+CLUSTER_SHARE_TOL = 1e-3
+
+_CLUSTER_ENTRY_FIELDS = {
+    "name": str, "engine": str, "backend": str, "n_nodes": int,
+    "L_us": (int, float), "n_threads": int, "n_ops": int,
+    "migrate": bool, "offered_frac": (int, float),
+    "offered_load": (int, float), "achieved_load": (int, float),
+    "p50_us": (int, float), "p90_us": (int, float),
+    "p99_us": (int, float), "max_us": (int, float), "count": int,
+    "missed": int, "miss_rate": (int, float), "source": str,
+    "nodes": list,
+}
+
+_CLUSTER_NODE_FIELDS = {
+    "node": int, "share": (int, float), "degraded": bool, "n_ops": int,
+    "offered_load": (int, float), "achieved_load": (int, float),
+    "count": int, "missed": int,
 }
 
 _ENTRY_FIELDS = {
@@ -99,9 +134,109 @@ def load(path: str) -> dict:
         fail(f"{path}: unreadable or not JSON ({e})")
     if isinstance(doc, dict) and doc.get("schema") == TAIL_SCHEMA:
         validate_tail_schema(doc, path)
+    elif isinstance(doc, dict) and doc.get("schema") == CLUSTER_SCHEMA:
+        validate_cluster_schema(doc, path)
     else:
         validate_schema(doc, path)
     return doc
+
+
+def _check_fields(obj: dict, fields: dict, where: str, path: str) -> None:
+    """Presence + type check (bool only passes where bool is declared)."""
+    for field, typ in fields.items():
+        if field not in obj:
+            fail(f"{path}: {where} missing {field!r}")
+        v = obj[field]
+        if typ is bool:
+            if not isinstance(v, bool):
+                fail(f"{path}: {where} field {field!r} has type "
+                     f"{type(v).__name__}, wanted bool")
+        elif not isinstance(v, typ) or isinstance(v, bool):
+            fail(f"{path}: {where} field {field!r} has type "
+                 f"{type(v).__name__}")
+
+
+def validate_cluster_schema(doc: dict, path: str) -> None:
+    host = doc.get("host")
+    if not isinstance(host, dict) or "cpu_count" not in host:
+        fail(f"{path}: missing/invalid host block")
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        fail(f"{path}: entries must be a non-empty list")
+    for e in entries:
+        if not isinstance(e, dict):
+            fail(f"{path}: entry is not an object: {e!r}")
+        tag = f"cluster entry {e.get('name', '?')!r} (L={e.get('L_us', '?')}us)"
+        _check_fields(e, _CLUSTER_ENTRY_FIELDS, tag, path)
+        if len(e["nodes"]) != e["n_nodes"]:
+            fail(f"{path}: {tag}: {len(e['nodes'])} node records for "
+                 f"n_nodes={e['n_nodes']}")
+        for n in e["nodes"]:
+            if not isinstance(n, dict):
+                fail(f"{path}: {tag}: node record is not an object: {n!r}")
+            _check_fields(n, _CLUSTER_NODE_FIELDS,
+                          f"{tag} node {n.get('node', '?')}", path)
+    summary = doc.get("summary")
+    if not isinstance(summary, dict) or not summary:
+        fail(f"{path}: summary must be a non-empty object")
+    for name, agg in summary.items():
+        for field in ("capacity", "offered_frac", "n_points", "n_nodes",
+                      "hottest_share", "degraded_nodes", "migrate"):
+            if field not in agg:
+                fail(f"{path}: summary {name!r} missing {field!r}")
+
+
+def check_cluster_invariants(doc: dict, path: str) -> list[str]:
+    """The machine-independent fleet invariants (see module doc)."""
+    entries = doc["entries"]
+    for e in entries:
+        tag = f"{e['name']} L={e['L_us']}us"
+        if e["offered_load"] <= 0:
+            fail(f"{path}: {tag}: offered_load must be > 0")
+        if e["achieved_load"] > e["offered_load"] * CLUSTER_RAMP_TOL:
+            fail(f"{path}: {tag}: fleet achieved {e['achieved_load']} "
+                 f"exceeds offered {e['offered_load']} x "
+                 f"{CLUSTER_RAMP_TOL} -- an open-loop fleet cannot outrun "
+                 "its arrivals")
+        if not 0 < e["p50_us"] <= e["p90_us"] <= e["p99_us"] \
+                <= e["max_us"]:
+            fail(f"{path}: {tag}: fleet percentiles not ordered "
+                 f"(p50={e['p50_us']} p90={e['p90_us']} "
+                 f"p99={e['p99_us']} max={e['max_us']})")
+        if not 0 <= e["miss_rate"] <= 1:
+            fail(f"{path}: {tag}: miss_rate {e['miss_rate']} not in [0, 1]")
+        if e["count"] + e["missed"] != e["n_ops"]:
+            fail(f"{path}: {tag}: fleet count + missed != n_ops")
+        share_sum = sum(n["share"] for n in e["nodes"])
+        if abs(share_sum - 1.0) > CLUSTER_SHARE_TOL:
+            fail(f"{path}: {tag}: node shares sum to {share_sum}, not 1")
+        for n in e["nodes"]:
+            ntag = f"{tag} node {n['node']}"
+            if n["n_ops"] == 0:
+                continue
+            if n["count"] + n["missed"] != n["n_ops"]:
+                fail(f"{path}: {ntag}: count + missed != n_ops")
+            if not e["migrate"] and n["achieved_load"] > \
+                    n["offered_load"] * CLUSTER_RAMP_TOL:
+                fail(f"{path}: {ntag}: achieved {n['achieved_load']} "
+                     f"exceeds offered {n['offered_load']} x "
+                     f"{CLUSTER_RAMP_TOL}")
+    degraded = [e for e in entries
+                if any(n["degraded"] and n["n_ops"] > 0
+                       for n in e["nodes"])]
+    declared = {name for name, agg in doc["summary"].items()
+                if agg["degraded_nodes"]}
+    if declared and not degraded:
+        fail(f"{path}: summary declares degraded nodes in "
+             f"{sorted(declared)} but no entry carries a degraded node "
+             "serving ops")
+    if not declared:
+        fail(f"{path}: no scenario declares a degraded node -- the "
+             "degraded-node scenario is part of the suite")
+    scenarios = sorted({e["name"] for e in entries})
+    return [f"{path}: fleet invariants ok ({len(entries)} points, "
+            f"{len(scenarios)} scenarios {scenarios}, "
+            f"{len(degraded)} degraded-node points)"]
 
 
 def validate_tail_schema(doc: dict, path: str) -> None:
@@ -163,7 +298,8 @@ def check_tail_invariants(doc: dict, path: str) -> list[str]:
 
 def validate_schema(doc: dict, path: str) -> None:
     if not isinstance(doc, dict) or doc.get("schema") != SCHEMA:
-        fail(f"{path}: schema must be {SCHEMA!r} or {TAIL_SCHEMA!r}, "
+        fail(f"{path}: schema must be {SCHEMA!r}, {TAIL_SCHEMA!r} or "
+             f"{CLUSTER_SCHEMA!r}, "
              f"got {doc.get('schema') if isinstance(doc, dict) else doc!r}")
     host = doc.get("host")
     if not isinstance(host, dict) or "cpu_count" not in host:
@@ -285,6 +421,8 @@ def main() -> None:
             f"({len(base['entries'])} entries)"]
     if base["schema"] == TAIL_SCHEMA:
         msgs += check_tail_invariants(base, baseline_path)
+    elif base["schema"] == CLUSTER_SCHEMA:
+        msgs += check_cluster_invariants(base, baseline_path)
     else:
         msgs += check_floors(base, baseline_path)
 
@@ -295,9 +433,11 @@ def main() -> None:
             fail(f"{args.fresh}: schema {fresh['schema']!r} does not "
                  f"match baseline {base['schema']!r}")
         if base["schema"] == TAIL_SCHEMA:
-            # tail invariants are machine-independent: enforce them on
-            # the fresh measurement directly, no baseline ratio
+            # tail/cluster invariants are machine-independent: enforce
+            # them on the fresh measurement directly, no baseline ratio
             msgs += check_tail_invariants(fresh, args.fresh)
+        elif base["schema"] == CLUSTER_SCHEMA:
+            msgs += check_cluster_invariants(fresh, args.fresh)
         else:
             msgs += check_regression(fresh, base, args.max_regress)
 
