@@ -7,6 +7,12 @@
 ``python -m benchmarks.run --scenario examples/scenarios/hash_index_2ssd.json``
                                         -- one declarative scenario through
                                            the public experiment API
+``python -m benchmarks.run --suite examples/scenarios``
+                                        -- every scenario spec in a directory
+                                           as one suite matrix, written to
+                                           ``BENCH_<dirname>.json`` for
+                                           baseline diffing with
+                                           ``tools/artifact_diff.py``
 ``python -m benchmarks.run --engine hash_index --devices 2``
                                         -- sugar: builds the default matrix
                                            scenario for one engine on N SSDs
@@ -162,6 +168,97 @@ def run_scenario_cmd(scenario, artifact_out: str | None,
               file=sys.stderr)
 
 
+def run_suite_cmd(suite_dir: str, out_path: str | None,
+                  collect_latency: bool, adaptive: bool,
+                  backend: str = "loop",
+                  backend_opts: dict | None = None) -> None:
+    """Sweep a directory of scenario specs as one suite matrix.
+
+    Every ``*.json`` in ``suite_dir`` is a :class:`Scenario` spec; the
+    suite document (``BENCH_<dirname>.json`` by default) carries a shared
+    ``index`` (one summary entry per scenario) plus per-scenario ``rows``
+    under ``artifacts``, in the shape ``tools/artifact_diff.py`` compares
+    suite-wise against a checked-in baseline.  On the loop backend the
+    simulator is deterministic in virtual time, so the rows -- unlike the
+    ``host`` block and wall-clock fields, which the diff ignores -- are
+    machine-independent.
+    """
+    import json
+    import os
+    import platform
+    from pathlib import Path
+
+    from repro.core.experiment import Experiment, Scenario
+
+    from . import common
+
+    d = Path(suite_dir)
+    paths = sorted(d.glob("*.json"))
+    if not paths:
+        sys.exit(f"no *.json scenario specs in {suite_dir!r}")
+    suite = d.name or "suite"
+    artifacts: dict = {}
+    index: list = []
+    t_suite = time.time()
+    for path in paths:
+        try:
+            spec = Scenario.from_json(path.read_text())
+        except (OSError, ValueError, TypeError, KeyError) as e:
+            sys.exit(f"bad scenario spec {str(path)!r}: {e}")
+        name = path.stem
+        t0 = time.time()
+        try:
+            art = Experiment(
+                spec,
+                common.run_options(
+                    collect_latency=collect_latency, adaptive=adaptive,
+                    backend=backend,
+                    collect_percentiles=bool(spec.arrival),
+                    **(backend_opts or {})),
+            ).run()
+        except (KeyError, ValueError) as e:
+            sys.exit(f"scenario {name!r}: {e.args[0] if e.args else e}")
+        wall = time.time() - t0
+        emit_artifact(art, f"suite/{suite}/{name}")
+        rows = json.loads(art.to_json())["rows"]
+        artifacts[name] = {"rows": rows}
+        cl = spec.cluster_spec()
+        index.append({
+            "scenario": name,
+            "file": path.name,
+            "engine": art.engine,
+            "workload": art.workload,
+            "n_rows": len(rows),
+            "arrival": (dict(spec.arrival).get("kind", "closed")
+                        if spec.arrival else "closed"),
+            "cluster_nodes": cl.n_nodes if cl is not None else 1,
+            "wall_s": round(wall, 3),
+        })
+    doc = {
+        "schema": "repro.scenario_suite/v1",
+        "suite": suite,
+        "backend": backend,
+        "host": {
+            "platform": platform.platform(),
+            "machine": platform.machine(),
+            "cpu_count": os.cpu_count(),
+            "python": platform.python_version(),
+        },
+        "index": index,
+        "artifacts": artifacts,
+        "summary": {
+            "n_scenarios": len(index),
+            "total_rows": sum(e["n_rows"] for e in index),
+            "total_wall_s": round(time.time() - t_suite, 3),
+        },
+    }
+    out = out_path or f"BENCH_{suite}.json"
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"suite/{suite}/artifact,0.0000,wrote={out}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter on bench names")
@@ -214,6 +311,15 @@ def main() -> None:
     ap.add_argument("--scenario", default=None, metavar="SPEC.json",
                     help="run one declarative scenario spec through the "
                          "experiment API instead of the paper figures")
+    ap.add_argument("--suite", default=None, metavar="DIR",
+                    help="run every *.json scenario spec in DIR as one "
+                         "suite matrix and write BENCH_<dirname>.json "
+                         "(shared artifact index + per-scenario rows; "
+                         "compare against a checked-in baseline with "
+                         "tools/artifact_diff.py)")
+    ap.add_argument("--suite-out", default=None, metavar="OUT.json",
+                    help="with --suite: suite document path (default "
+                         "BENCH_<dirname>.json in the working directory)")
     ap.add_argument("--artifact", default=None, metavar="OUT.json",
                     help="with --scenario/--engine: write the RunArtifact "
                          "(sweep table + provenance) as JSON")
@@ -357,6 +463,19 @@ def main() -> None:
         sys.exit("--replicas/--route-latency require --nodes N")
 
     print("name,us_per_call,derived")
+
+    if args.suite is not None:
+        if args.scenario is not None or args.engine is not None:
+            sys.exit("--suite is exclusive with --scenario/--engine")
+        if arrival is not None or cluster is not None:
+            sys.exit("--suite specs are self-contained; drop "
+                     "--arrival/--nodes overlays")
+        run_suite_cmd(args.suite, args.suite_out, args.collect_latency,
+                      args.adaptive, args.backend,
+                      backend_opts=backend_opts)
+        return
+    if args.suite_out is not None:
+        sys.exit("--suite-out requires --suite DIR")
 
     if args.scenario is not None:
         from repro.core.experiment import Scenario

@@ -35,7 +35,9 @@ def __getattr__(name):
     # Legacy attribute access (`repro.core.kvstore` / `repro.core.simulator`
     # after `import repro.core`) keeps working: resolve the deprecation
     # shims lazily so their DeprecationWarning only fires on actual use.
-    if name in ("kvstore", "simulator"):
+    if name in ("kvstore", "simulator", "conformance"):
+        # conformance resolves lazily too, so `python -m
+        # repro.core.conformance` doesn't re-import its own main module.
         import importlib
 
         return importlib.import_module(f".{name}", __name__)

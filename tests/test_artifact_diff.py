@@ -11,9 +11,12 @@ so the test drives its real ``main()`` through ``sys.argv``.
 import copy
 import importlib.util
 import json
+import math
 from pathlib import Path
 
 import pytest
+
+from _hypothesis_support import given, settings, st  # optional shim
 
 ROOT = Path(__file__).resolve().parent.parent
 
@@ -133,7 +136,181 @@ class TestExitCodes:
         assert _run(monkeypatch, [str(good), str(tmp_path / "nope")]) == 1
         assert _run(monkeypatch, [str(good), str(empty)]) == 1
 
+    def test_nan_quantity_fails_exact(self, write_pair, monkeypatch):
+        rows_b = _cluster_rows()
+        rows_b[0]["tail"]["p99_us"] = math.nan
+        a, b = write_pair(_cluster_rows(), rows_b)
+        assert _run(monkeypatch, [a, b, "--exact"]) == 1
+        assert _run(monkeypatch, [a, b]) == 0        # report-only
+
     def test_mixture_labels_align(self, write_pair, monkeypatch):
         row = _row(L=[[1.0, 0.7], [10.0, 0.3]])
         a, b = write_pair([row], [copy.deepcopy(row)])
         assert _run(monkeypatch, [a, b, "--exact"]) == 0
+
+
+def _suite(rows_by_name, **extra):
+    doc = {"schema": artifact_diff.SUITE_SCHEMA, "suite": "scenarios",
+           "artifacts": {name: {"rows": rows}
+                         for name, rows in rows_by_name.items()}}
+    doc.update(extra)
+    return doc
+
+
+class TestSuiteMode:
+    """Suite documents are compared scenario-by-scenario; one verdict."""
+
+    def _write(self, tmp_path, doc_a, doc_b):
+        a, b = tmp_path / "a.json", tmp_path / "b.json"
+        a.write_text(json.dumps(doc_a))
+        b.write_text(json.dumps(doc_b))
+        return str(a), str(b)
+
+    def test_identical_suites_pass_exact(self, tmp_path, monkeypatch):
+        doc = _suite({"one": [_row()], "two": _cluster_rows()})
+        a, b = self._write(tmp_path, doc, copy.deepcopy(doc))
+        assert _run(monkeypatch, [a, b, "--exact"]) == 0
+
+    def test_scenario_set_mismatch_fails(self, tmp_path, monkeypatch):
+        doc_a = _suite({"one": [_row()], "two": [_row()]})
+        doc_b = _suite({"one": [_row()], "three": [_row()]})
+        a, b = self._write(tmp_path, doc_a, doc_b)
+        assert _run(monkeypatch, [a, b]) == 1
+
+    def test_drift_in_any_scenario_breaches_threshold(self, tmp_path,
+                                                      monkeypatch):
+        doc_a = _suite({"one": [_row()], "two": [_row()]})
+        doc_b = copy.deepcopy(doc_a)
+        doc_b["artifacts"]["two"]["rows"][0]["throughput"] *= 1.05
+        doc_b["artifacts"]["two"]["rows"][0]["model_throughput"] *= 1.05
+        a, b = self._write(tmp_path, doc_a, doc_b)
+        assert _run(monkeypatch, [a, b, "--max-rel", "0.1"]) == 0
+        assert _run(monkeypatch, [a, b, "--max-rel", "0.01"]) == 1
+
+    def test_suite_vs_plain_artifact_fails(self, tmp_path, monkeypatch):
+        doc_a = _suite({"one": [_row()]})
+        a, b = self._write(tmp_path, doc_a, {"rows": [_row()]})
+        assert _run(monkeypatch, [a, b]) == 1
+
+    def test_thread_mismatch_inside_suite_exits_2(self, tmp_path,
+                                                  monkeypatch):
+        doc_a = _suite({"one": [_row()]})
+        doc_b = copy.deepcopy(doc_a)
+        doc_b["artifacts"]["one"]["rows"][0]["n_threads"] = 16
+        a, b = self._write(tmp_path, doc_a, doc_b)
+        assert _run(monkeypatch, [a, b]) == 2
+
+
+# -- property-based fuzz: generated row tables -------------------------------
+#
+# @given forbids function-scoped fixtures (monkeypatch, tmp_path), so
+# these tests manage sys.argv themselves and draw from the session-scoped
+# tmp_path_factory.
+
+
+def _run_argv(argv):
+    import sys as _sys
+    old = _sys.argv
+    _sys.argv = ["artifact_diff.py", *argv]
+    try:
+        try:
+            artifact_diff.main()
+        except SystemExit as e:
+            if e.code in (None, 0):
+                return 0
+            return e.code if isinstance(e.code, int) else 1
+        return 0
+    finally:
+        _sys.argv = old
+
+
+@st.composite
+def _tables(draw):
+    """A syntactically valid row table: unique latency axis, positive
+    throughputs, ordered tails, optional per-node breakdown."""
+    lats = draw(st.lists(
+        st.sampled_from([0.5, 1.0, 2.0, 5.0, 8.0, 12.0]),
+        unique=True, min_size=1, max_size=4))
+    with_nodes = draw(st.booleans())
+    rows = []
+    for L in lats:
+        thr = draw(st.floats(min_value=1e3, max_value=1e6,
+                             allow_nan=False, allow_infinity=False))
+        p50 = draw(st.floats(min_value=1.0, max_value=400.0,
+                             allow_nan=False, allow_infinity=False))
+        tail = {"p50_us": p50, "p90_us": p50 * 2.0, "p99_us": p50 * 5.0}
+        row = _row(L=L, thr=thr, model=thr * 1.04, tail=tail)
+        if with_nodes:
+            row["nodes"] = [
+                {"node": i, "throughput": thr / 2.0, "tail": dict(tail)}
+                for i in range(2)]
+        rows.append(row)
+    return rows
+
+
+class TestFuzzedTables:
+    """Properties the differ must hold for on any well-formed table."""
+
+    @given(rows=_tables())
+    @settings(max_examples=25, deadline=None)
+    def test_table_is_exact_equal_to_its_copy(self, rows,
+                                              tmp_path_factory):
+        tmp = tmp_path_factory.mktemp("fz")
+        a, b = tmp / "a.json", tmp / "b.json"
+        a.write_text(json.dumps({"rows": rows}))
+        b.write_text(json.dumps({"rows": copy.deepcopy(rows)}))
+        assert _run_argv([str(a), str(b), "--exact"]) == 0
+
+    @given(rows=_tables(), pick=st.integers(min_value=0, max_value=99))
+    @settings(max_examples=25, deadline=None)
+    def test_row_misalignment_never_passes(self, rows, pick,
+                                           tmp_path_factory):
+        # Dropping or relabeling any row must be structural (exit 1),
+        # never a silent pass -- rows are aligned by latency label.
+        rows_b = copy.deepcopy(rows)
+        idx = pick % len(rows_b)
+        if pick % 2 == 0 and len(rows_b) > 1:
+            del rows_b[idx]
+        else:
+            rows_b[idx]["L_us"] = 99.0
+        tmp = tmp_path_factory.mktemp("fz")
+        a, b = tmp / "a.json", tmp / "b.json"
+        a.write_text(json.dumps({"rows": rows}))
+        b.write_text(json.dumps({"rows": rows_b}))
+        assert _run_argv([str(a), str(b)]) == 1
+
+    @given(rows=_tables(), pick=st.integers(min_value=0, max_value=99))
+    @settings(max_examples=25, deadline=None)
+    def test_nan_tail_never_satisfies_exact(self, rows, pick,
+                                            tmp_path_factory):
+        # NaN makes every comparison false; rel() must map it to an
+        # infinite difference, not let it slide under the threshold.
+        rows_b = copy.deepcopy(rows)
+        row = rows_b[pick % len(rows_b)]
+        field = ("p50_us", "p90_us", "p99_us")[pick % 3]
+        row["tail"][field] = math.nan
+        tmp = tmp_path_factory.mktemp("fz")
+        a, b = tmp / "a.json", tmp / "b.json"
+        a.write_text(json.dumps({"rows": rows}))
+        b.write_text(json.dumps({"rows": rows_b}))
+        assert _run_argv([str(a), str(b), "--exact"]) == 1
+        # ...but report-only mode still completes (exit 0, worst=inf).
+        assert _run_argv([str(a), str(b)]) == 0
+
+    @given(rows=_tables(), pick=st.integers(min_value=0, max_value=99))
+    @settings(max_examples=25, deadline=None)
+    def test_per_node_asymmetry_is_structural(self, rows, pick,
+                                              tmp_path_factory):
+        # A node present on one side only must exit 1 regardless of
+        # thresholds -- node counts are part of the artifact's shape.
+        rows_b = copy.deepcopy(rows)
+        row = rows_b[pick % len(rows_b)]
+        if "nodes" not in row:
+            row["nodes"] = [{"node": 0, "throughput": 1.0}]
+        else:
+            del row["nodes"][0]
+        tmp = tmp_path_factory.mktemp("fz")
+        a, b = tmp / "a.json", tmp / "b.json"
+        a.write_text(json.dumps({"rows": rows}))
+        b.write_text(json.dumps({"rows": rows_b}))
+        assert _run_argv([str(a), str(b)]) == 1

@@ -1,0 +1,332 @@
+"""``tools/check_bench.py`` -- one table-driven validator, four schemas.
+
+Contract: a well-formed measurement file of any schema in
+``check_bench.SCHEMAS`` exits 0; a missing/mistyped field, a violated
+invariant (unordered percentiles, achieved load outrunning offered,
+node shares not summing to 1, a missing degraded node, index/artifact
+disagreement), or a breached perf floor exits 1 with a
+``check_bench: FAIL:`` message.  Fresh mode compares warm speedups for
+the jax-grid schema and re-validates machine-independent invariants for
+the rest.  The tool is stdlib-only, so the tests drive its real
+``main()`` through ``sys.argv`` on tmp-path JSON fixtures.
+"""
+import copy
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+spec = importlib.util.spec_from_file_location(
+    "check_bench", ROOT / "tools" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_bench)
+
+HOST = {"platform": "test", "machine": "x", "cpu_count": 4}
+
+
+# -- minimal valid documents, one per schema ---------------------------------
+
+def grid_entry(name="default", cells=6, lats=3, threads=2, speedup=6.0):
+    return {
+        "name": name, "engine": "hash-index", "n_ssd": 1,
+        "n_latencies": lats, "n_threads": threads, "cells": cells,
+        "n_ops": 2000, "loop_s": 1.2, "loop_mode": "python",
+        "jax_cold_s": 2.0, "jax_warm_s": 1.2 / speedup,
+        "warm_speedup": speedup,
+    }
+
+
+def grid_doc(default_speedup=6.0):
+    return {
+        "schema": check_bench.SCHEMA, "host": HOST,
+        "entries": [grid_entry(speedup=default_speedup)],
+        "summary": {"default": {
+            "cells": 6, "loop_s": 1.2,
+            "jax_warm_s": 1.2 / default_speedup,
+            "warm_speedup": default_speedup,
+        }},
+    }
+
+
+def tail_entry(frac=0.5, offered=100_000.0, achieved=99_000.0,
+               n_ops=100, missed=0):
+    return {
+        "name": "smoke", "engine": "hash-index", "L_us": 2.0,
+        "n_threads": 8, "n_ops": n_ops, "offered_frac": frac,
+        "offered_load": offered, "achieved_load": achieved,
+        "p50_us": 20.0, "p90_us": 45.0, "p99_us": 110.0,
+        "max_us": 300.0, "count": n_ops - missed, "missed": missed,
+        "miss_rate": missed / n_ops, "source": "test",
+    }
+
+
+def tail_doc():
+    return {
+        "schema": check_bench.TAIL_SCHEMA, "host": HOST,
+        "entries": [tail_entry(0.5, 100_000.0),
+                    tail_entry(0.9, 180_000.0, 170_000.0)],
+        "summary": {"smoke": {"capacity": 200_000.0,
+                              "offered_fracs": [0.5, 0.9],
+                              "n_points": 2}},
+    }
+
+
+def cluster_node(node=0, share=0.5, degraded=False, n_ops=50):
+    return {
+        "node": node, "share": share, "degraded": degraded,
+        "n_ops": n_ops, "offered_load": 60_000.0,
+        "achieved_load": 58_000.0, "count": n_ops, "missed": 0,
+    }
+
+
+def cluster_entry(name="degraded_node", migrate=False):
+    return {
+        "name": name, "engine": "hash-index", "backend": "loop",
+        "n_nodes": 2, "L_us": 2.0, "n_threads": 16, "n_ops": 100,
+        "migrate": migrate, "offered_frac": 0.6,
+        "offered_load": 120_000.0, "achieved_load": 115_000.0,
+        "p50_us": 25.0, "p90_us": 60.0, "p99_us": 140.0,
+        "max_us": 400.0, "count": 100, "missed": 0, "miss_rate": 0.0,
+        "source": "test",
+        "nodes": [cluster_node(0, 0.5),
+                  cluster_node(1, 0.5, degraded=(name == "degraded_node"))],
+    }
+
+
+def cluster_doc():
+    agg = {"capacity": 200_000.0, "offered_frac": 0.6, "n_points": 1,
+           "n_nodes": 2, "hottest_share": 0.5, "migrate": False}
+    return {
+        "schema": check_bench.CLUSTER_SCHEMA, "host": HOST,
+        "entries": [cluster_entry("degraded_node"),
+                    cluster_entry("hot_shard")],
+        "summary": {
+            "degraded_node": dict(agg, degraded_nodes=[1]),
+            "hot_shard": dict(agg, degraded_nodes=[]),
+        },
+    }
+
+
+def suite_row(threads=8, thr=100_000.0, nodes=None):
+    r = {"n_threads": threads, "throughput": thr,
+         "model_throughput": thr * 1.05}
+    if nodes is not None:
+        r["nodes"] = nodes
+    return r
+
+
+def suite_doc():
+    nodes = [{"node": 0, "share": 0.6, "throughput": 60_000.0},
+             {"node": 1, "share": 0.4, "throughput": 40_000.0}]
+    return {
+        "schema": check_bench.SUITE_SCHEMA, "suite": "scenarios",
+        "backend": "loop", "host": HOST,
+        "index": [
+            {"scenario": "flat", "file": "flat.json",
+             "engine": "hash-index", "workload": "uniform", "n_rows": 2,
+             "arrival": "closed", "cluster_nodes": 0, "wall_s": 0.5},
+            {"scenario": "fleet", "file": "fleet.json", "engine": "lsm",
+             "workload": "zipf", "n_rows": 1, "arrival": "poisson",
+             "cluster_nodes": 2, "wall_s": 0.9},
+        ],
+        "artifacts": {
+            "flat": {"rows": [suite_row(), suite_row(16, 150_000.0)]},
+            "fleet": {"rows": [suite_row(nodes=nodes)]},
+        },
+        "summary": {"n_scenarios": 2, "total_rows": 3,
+                    "total_wall_s": 1.4},
+    }
+
+
+ALL_DOCS = {
+    "grid": grid_doc, "tail": tail_doc, "cluster": cluster_doc,
+    "suite": suite_doc,
+}
+
+
+@pytest.fixture
+def write(tmp_path):
+    def _write(doc, name="bench.json"):
+        p = tmp_path / name
+        p.write_text(json.dumps(doc))
+        return str(p)
+    return _write
+
+
+def _run(monkeypatch, argv):
+    monkeypatch.setattr("sys.argv", ["check_bench.py", *argv])
+    try:
+        check_bench.main()
+    except SystemExit as e:
+        if e.code in (None, 0):
+            return 0
+        return e.code if isinstance(e.code, int) else 1
+    return 0
+
+
+class TestSchemaTable:
+    @pytest.mark.parametrize("kind", sorted(ALL_DOCS))
+    def test_valid_doc_passes(self, kind, write, monkeypatch):
+        assert _run(monkeypatch, [write(ALL_DOCS[kind]())]) == 0
+
+    @pytest.mark.parametrize("kind", sorted(ALL_DOCS))
+    def test_fresh_mode_accepts_itself(self, kind, write, monkeypatch):
+        p = write(ALL_DOCS[kind]())
+        assert _run(monkeypatch, ["--fresh", p, "--baseline", p]) == 0
+
+    def test_unknown_schema_fails(self, write, monkeypatch):
+        doc = grid_doc()
+        doc["schema"] = "repro.nope/v1"
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_unreadable_file_fails(self, tmp_path, monkeypatch):
+        assert _run(monkeypatch, [str(tmp_path / "missing.json")]) == 1
+
+    def test_missing_host_fails(self, write, monkeypatch):
+        doc = tail_doc()
+        del doc["host"]
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    @pytest.mark.parametrize("kind", ["grid", "tail", "cluster"])
+    def test_missing_entry_field_fails(self, kind, write, monkeypatch):
+        doc = ALL_DOCS[kind]()
+        del doc["entries"][0]["engine"]
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_bool_does_not_satisfy_numeric_field(self, write,
+                                                 monkeypatch):
+        doc = tail_doc()
+        doc["entries"][0]["offered_load"] = True
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_fresh_schema_must_match_baseline(self, write, monkeypatch):
+        base = write(grid_doc(), "base.json")
+        fresh = write(tail_doc(), "fresh.json")
+        assert _run(monkeypatch, ["--fresh", fresh,
+                                  "--baseline", base]) == 1
+
+
+class TestGridSchema:
+    def test_cells_must_factor(self, write, monkeypatch):
+        doc = grid_doc()
+        doc["entries"][0]["cells"] = 7
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_default_floor(self, write, monkeypatch):
+        assert _run(monkeypatch, [write(grid_doc(0.8))]) == 1
+
+    def test_het_entry_needs_cohort_fields(self, write, monkeypatch):
+        doc = grid_doc()
+        doc["entries"].append(grid_entry(name="het"))
+        doc["summary"]["het"] = dict(doc["summary"]["default"],
+                                     mono_speedup=2.0)
+        assert _run(monkeypatch, [write(doc)]) == 1    # het fields absent
+
+    def test_regression_gate(self, write, monkeypatch):
+        base = write(grid_doc(6.0), "base.json")
+        ok = write(grid_doc(3.0), "ok.json")         # 2x slower: allowed
+        bad = write(grid_doc(1.5), "bad.json")       # 4x slower: not
+        assert _run(monkeypatch, ["--fresh", ok, "--baseline", base]) == 0
+        assert _run(monkeypatch, ["--fresh", bad, "--baseline",
+                                  base]) == 1
+        assert _run(monkeypatch, ["--fresh", bad, "--baseline", base,
+                                  "--max-regress", "10"]) == 0
+
+    def test_disjoint_suites_fail_regression(self, write, monkeypatch):
+        fresh_doc = grid_doc()
+        fresh_doc["summary"] = {"other": fresh_doc["summary"]["default"]}
+        fresh_doc["entries"][0]["name"] = "other"
+        base = write(grid_doc(), "base.json")
+        fresh = write(fresh_doc, "fresh.json")
+        assert _run(monkeypatch, ["--fresh", fresh,
+                                  "--baseline", base]) == 1
+
+
+class TestTailInvariants:
+    def test_achieved_cannot_outrun_offered(self, write, monkeypatch):
+        doc = tail_doc()
+        doc["entries"][0]["achieved_load"] = \
+            doc["entries"][0]["offered_load"] * 1.2
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_percentiles_must_be_ordered(self, write, monkeypatch):
+        doc = tail_doc()
+        doc["entries"][1]["p90_us"] = 200.0          # above p99
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_count_conservation(self, write, monkeypatch):
+        doc = tail_doc()
+        doc["entries"][0]["missed"] = 3              # count + 3 != n_ops...
+        doc["entries"][0]["miss_rate"] = 0.03
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_needs_two_offered_loads(self, write, monkeypatch):
+        doc = tail_doc()
+        doc["entries"][1]["offered_load"] = \
+            doc["entries"][0]["offered_load"]
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+
+class TestClusterInvariants:
+    def test_shares_must_sum_to_one(self, write, monkeypatch):
+        doc = cluster_doc()
+        doc["entries"][0]["nodes"][0]["share"] = 0.7
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_node_records_match_n_nodes(self, write, monkeypatch):
+        doc = cluster_doc()
+        del doc["entries"][0]["nodes"][1]
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_degraded_scenario_required(self, write, monkeypatch):
+        doc = cluster_doc()
+        for agg in doc["summary"].values():
+            agg["degraded_nodes"] = []
+        for e in doc["entries"]:
+            for n in e["nodes"]:
+                n["degraded"] = False
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_migrate_exempts_per_node_bound(self, write, monkeypatch):
+        doc = cluster_doc()
+        for e in doc["entries"]:
+            if e["name"] != "degraded_node":
+                continue
+            e["migrate"] = True
+            e["nodes"][0]["achieved_load"] = \
+                e["nodes"][0]["offered_load"] * 2.0
+        assert _run(monkeypatch, [write(doc)]) == 0
+        strict = copy.deepcopy(doc)
+        for e in strict["entries"]:
+            e["migrate"] = False
+        assert _run(monkeypatch, [write(strict, "strict.json")]) == 1
+
+
+class TestSuiteSchema:
+    def test_index_and_artifacts_must_agree(self, write, monkeypatch):
+        doc = suite_doc()
+        doc["artifacts"]["extra"] = {"rows": [suite_row()]}
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_declared_row_count_checked(self, write, monkeypatch):
+        doc = suite_doc()
+        doc["index"][0]["n_rows"] = 5
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_rows_must_be_positive(self, write, monkeypatch):
+        doc = suite_doc()
+        doc["artifacts"]["flat"]["rows"][0]["throughput"] = 0.0
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_cluster_row_shares_checked(self, write, monkeypatch):
+        doc = suite_doc()
+        doc["artifacts"]["fleet"]["rows"][0]["nodes"][0]["share"] = 0.9
+        assert _run(monkeypatch, [write(doc)]) == 1
+
+    def test_flat_summary_fields_required(self, write, monkeypatch):
+        doc = suite_doc()
+        del doc["summary"]["total_rows"]
+        assert _run(monkeypatch, [write(doc)]) == 1

@@ -24,6 +24,7 @@ import pytest
 jax = pytest.importorskip("jax")
 
 from repro.core import workloads
+from repro.core.conformance import P50_TOL, P99_TOL, jax_grid_tol
 from repro.core.engines import LSMStore, available_engines, run_trace
 from repro.core.experiment import (
     RunOptions,
@@ -191,7 +192,7 @@ class TestGridEquivalence:
         cfg = SimConfig(P=12, seed=7)
         worst, _ = _grid_vs_loop(cfg, lsm_small.trace,
                                  [1 * US, 5 * US], [24, 48], n_ops=5000)
-        assert worst < 0.02, f"{worst:.2%}"
+        assert worst < jax_grid_tol(5000), f"{worst:.2%}"
 
     FEATURES = [
         dict(eps=0.05),
@@ -206,9 +207,11 @@ class TestGridEquivalence:
                              ids=[",".join(k) for k in FEATURES])
     def test_device_features_close_to_loop(self, lsm_small, kw):
         cfg = SimConfig(P=12, seed=7, **kw)
+        # non-default device features add small systematic offsets on top
+        # of the contract's sampling-noise scaling, hence the 1.25x slack
         worst, _ = _grid_vs_loop(cfg, lsm_small.trace,
                                  [1 * US, 5 * US], [24, 48], n_ops=5000)
-        assert worst < 0.025, f"{kw}: {worst:.2%}"
+        assert worst < jax_grid_tol(5000, slack=1.25), f"{kw}: {worst:.2%}"
 
     @pytest.mark.slow
     @pytest.mark.parametrize("engine", ENGINES)
@@ -228,7 +231,8 @@ class TestGridEquivalence:
         worst, _ = _grid_vs_loop(
             cfg, trace, [l * US for l in sc.latencies_us],
             list(sc.thread_candidates), n_ops=20_000)
-        assert worst < 0.01, f"{engine}: worst cell {worst:.2%}"
+        assert worst < jax_grid_tol(20_000), \
+            f"{engine}: worst cell {worst:.2%}"
 
     def test_cell_results_independent_of_grid_composition(self, lsm_small):
         """Cache purity: a cell's numbers are a function of its own
@@ -290,7 +294,7 @@ class TestGridEquivalence:
         cfg = SimConfig(P=12, seed=7, **kw)
         worst, _ = _grid_vs_loop(cfg, lsm_small.trace,
                                  [1 * US, 5 * US], [8, 16], n_ops=6000)
-        assert worst < 0.02, f"{kw}: {worst:.2%}"
+        assert worst < jax_grid_tol(6000, slack=1.1), f"{kw}: {worst:.2%}"
 
     def test_multicore_matches_pallas_path(self, lsm_small):
         cfg = SimConfig(P=12, seed=7, n_cores=2)
@@ -680,16 +684,14 @@ class TestSweepCachePrune:
 # contract is tolerance equivalence: HIST_REL_ERROR (< 1.9%) of binning
 # error plus cross-stream sampling noise.  Measured worst cases at
 # n_ops=400 on these configs: P50 within 3.4%, P99 within 6.2%; the
-# asserted bounds below (8% / 12%) carry margin over that.
+# asserted bounds (P50_TOL/P99_TOL, 8% / 12%, imported from the contract
+# table in repro.core.conformance) carry margin over that.
 
 from repro.core.sim import (  # noqa: E402
     HIST_REL_ERROR,
     ArrivalSpec,
     generate_arrivals,
 )
-
-P50_TOL = 0.08
-P99_TOL = 0.12
 
 ARR_SPECS = {
     "poisson": ArrivalSpec(kind="poisson", rate=150e3, seed=5),

@@ -25,29 +25,51 @@ Rows are aligned by their latency label; artifacts whose latency axes or
 winning thread counts disagree exit 2 (structural mismatch -- thread
 counts are part of the operating point, not a tolerance question).
 Cluster artifacts additionally compare per-node throughput and tails.
-Stdlib-only, like the other ``tools/`` checkers.
+
+Suite documents (``benchmarks.run --suite``, schema
+``repro.scenario_suite/v1``) are compared suite-wise: both files must
+cover the same scenario names, and each scenario's rows are diffed
+against its namesake with the same thresholds -- the one worst-relative
+verdict spans the whole suite.  Stdlib-only, like the other ``tools/``
+checkers.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 TAIL_FIELDS = ("p50_us", "p90_us", "p99_us")
+SUITE_SCHEMA = "repro.scenario_suite/v1"
 
 
-def load_rows(path: str) -> list[dict]:
+def load_doc(path: str) -> dict:
     try:
         with open(path) as f:
             doc = json.load(f)
     except (OSError, ValueError) as e:
         sys.exit(f"artifact_diff: FAIL: {path}: unreadable or not JSON "
                  f"({e})")
+    if not isinstance(doc, dict):
+        sys.exit(f"artifact_diff: FAIL: {path}: not a JSON object")
+    return doc
+
+
+def is_suite(doc: dict) -> bool:
+    return doc.get("schema") == SUITE_SCHEMA or "artifacts" in doc
+
+
+def rows_of(doc: dict, path: str) -> list[dict]:
     rows = doc.get("rows")
     if not isinstance(rows, list) or not rows:
         sys.exit(f"artifact_diff: FAIL: {path}: not a RunArtifact "
                  "(missing/empty rows)")
     return rows
+
+
+def load_rows(path: str) -> list[dict]:
+    return rows_of(load_doc(path), path)
 
 
 def label(row: dict) -> str:
@@ -58,6 +80,11 @@ def label(row: dict) -> str:
 
 
 def rel(a: float, b: float) -> float:
+    # A non-finite quantity is an infinite difference unless both sides
+    # carry the identical value -- NaN must never satisfy a threshold by
+    # making every comparison false.
+    if not (math.isfinite(a) and math.isfinite(b)):
+        return 0.0 if a == b else math.inf
     ref = max(abs(a), abs(b))
     return abs(a - b) / ref if ref else 0.0
 
@@ -95,6 +122,73 @@ def diff_tails(what: str, ta: dict | None, tb: dict | None,
         out.append(f"  {what}: " + "  ".join(parts))
 
 
+def diff_rows(rows_a: list[dict], rows_b: list[dict], d: Diff,
+              d_tail: Diff, out: list[str], where: str = "") -> None:
+    """Diff one aligned pair of row tables into the shared accumulators.
+
+    ``where`` prefixes every message (the scenario name in suite mode).
+    Structural mismatches exit immediately: diverging latency axes and
+    node counts exit 1, diverging winning thread counts exit 2.
+    """
+    by_label = {label(r): r for r in rows_b}
+    if [label(r) for r in rows_a] != list(by_label):
+        sys.exit(f"artifact_diff: FAIL: {where}latency axes differ: "
+                 f"{[label(r) for r in rows_a]} vs {list(by_label)}")
+
+    for ra in rows_a:
+        rb = by_label[label(ra)]
+        if ra["n_threads"] != rb["n_threads"]:
+            print(f"artifact_diff: FAIL: {where}{label(ra)}: winning "
+                  f"thread counts differ ({ra['n_threads']} vs "
+                  f"{rb['n_threads']})", file=sys.stderr)
+            sys.exit(2)
+        r_thr = d.add(f"{where}{label(ra)} throughput",
+                      ra["throughput"], rb["throughput"])
+        err_a = rel(ra["throughput"], ra["model_throughput"])
+        err_b = rel(rb["throughput"], rb["model_throughput"])
+        out.append(
+            f"{where}{label(ra)}: threads {ra['n_threads']}  "
+            f"throughput {ra['throughput']:.1f}/{rb['throughput']:.1f} "
+            f"({r_thr:+.2%})  model-err {err_a:.2%}/{err_b:.2%} "
+            f"({d.add(f'{where}{label(ra)} model error', err_a, err_b):+.2%})")
+        diff_tails(f"{where}{label(ra)} fleet tail", ra.get("tail"),
+                   rb.get("tail"), d_tail, out)
+        na, nb = ra.get("nodes") or [], rb.get("nodes") or []
+        if len(na) != len(nb):
+            sys.exit(f"artifact_diff: FAIL: {where}{label(ra)}: node "
+                     f"counts differ ({len(na)} vs {len(nb)})")
+        for xa, xb in zip(na, nb):
+            w = f"{where}{label(ra)} node {xa['node']}"
+            r_n = d.add(f"{w} throughput",
+                        xa["throughput"], xb["throughput"])
+            out.append(f"  {w}: throughput {xa['throughput']:.1f}/"
+                       f"{xb['throughput']:.1f} ({r_n:+.2%})")
+            diff_tails(f"{w} tail", xa.get("tail"), xb.get("tail"),
+                       d_tail, out)
+
+
+def suite_row_tables(doc_a: dict, doc_b: dict, path_a: str,
+                     path_b: str) -> list[tuple[str, list, list]]:
+    """Align two suite documents scenario-by-scenario."""
+    arts_a, arts_b = doc_a.get("artifacts"), doc_b.get("artifacts")
+    for path, arts in ((path_a, arts_a), (path_b, arts_b)):
+        if not isinstance(arts, dict) or not arts:
+            sys.exit(f"artifact_diff: FAIL: {path}: not a scenario suite "
+                     "(missing/empty artifacts)")
+    if sorted(arts_a) != sorted(arts_b):
+        only_a = sorted(set(arts_a) - set(arts_b))
+        only_b = sorted(set(arts_b) - set(arts_a))
+        sys.exit(f"artifact_diff: FAIL: suite scenario sets differ "
+                 f"(only in {path_a}: {only_a}; only in {path_b}: "
+                 f"{only_b})")
+    return [
+        (name,
+         rows_of(arts_a[name], f"{path_a}[{name}]"),
+         rows_of(arts_b[name], f"{path_b}[{name}]"))
+        for name in sorted(arts_a)
+    ]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("a", metavar="A.json")
@@ -117,44 +211,21 @@ def main() -> None:
     if args.max_rel_tail is None:
         args.max_rel_tail = args.max_rel
 
-    rows_a, rows_b = load_rows(args.a), load_rows(args.b)
-    by_label = {label(r): r for r in rows_b}
-    if [label(r) for r in rows_a] != list(by_label):
-        sys.exit(f"artifact_diff: FAIL: latency axes differ: "
-                 f"{[label(r) for r in rows_a]} vs {list(by_label)}")
+    doc_a, doc_b = load_doc(args.a), load_doc(args.b)
+    if is_suite(doc_a) != is_suite(doc_b):
+        kind = lambda d: "suite" if is_suite(d) else "artifact"  # noqa: E731
+        sys.exit(f"artifact_diff: FAIL: cannot compare a {kind(doc_a)} "
+                 f"against a {kind(doc_b)}")
 
     d, d_tail = Diff(), Diff()
     out: list[str] = []
-    for ra in rows_a:
-        rb = by_label[label(ra)]
-        if ra["n_threads"] != rb["n_threads"]:
-            print(f"artifact_diff: FAIL: {label(ra)}: winning thread "
-                  f"counts differ ({ra['n_threads']} vs "
-                  f"{rb['n_threads']})", file=sys.stderr)
-            sys.exit(2)
-        r_thr = d.add(f"{label(ra)} throughput",
-                      ra["throughput"], rb["throughput"])
-        err_a = rel(ra["throughput"], ra["model_throughput"])
-        err_b = rel(rb["throughput"], rb["model_throughput"])
-        out.append(
-            f"{label(ra)}: threads {ra['n_threads']}  "
-            f"throughput {ra['throughput']:.1f}/{rb['throughput']:.1f} "
-            f"({r_thr:+.2%})  model-err {err_a:.2%}/{err_b:.2%} "
-            f"({d.add(f'{label(ra)} model error', err_a, err_b):+.2%})")
-        diff_tails(f"{label(ra)} fleet tail", ra.get("tail"),
-                   rb.get("tail"), d_tail, out)
-        na, nb = ra.get("nodes") or [], rb.get("nodes") or []
-        if len(na) != len(nb):
-            sys.exit(f"artifact_diff: FAIL: {label(ra)}: node counts "
-                     f"differ ({len(na)} vs {len(nb)})")
-        for xa, xb in zip(na, nb):
-            w = f"{label(ra)} node {xa['node']}"
-            r_n = d.add(f"{w} throughput",
-                        xa["throughput"], xb["throughput"])
-            out.append(f"  {w}: throughput {xa['throughput']:.1f}/"
-                       f"{xb['throughput']:.1f} ({r_n:+.2%})")
-            diff_tails(f"{w} tail", xa.get("tail"), xb.get("tail"),
-                       d_tail, out)
+    if is_suite(doc_a):
+        for name, rows_a, rows_b in suite_row_tables(
+                doc_a, doc_b, args.a, args.b):
+            diff_rows(rows_a, rows_b, d, d_tail, out, where=f"{name} ")
+    else:
+        diff_rows(rows_of(doc_a, args.a), rows_of(doc_b, args.b),
+                  d, d_tail, out)
 
     for line in out:
         print(f"artifact_diff: {line}")

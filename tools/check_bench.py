@@ -1,8 +1,10 @@
 #!/usr/bin/env python
 """Validate checked-in benchmark measurements (schema + floors).
 
-Handles three measurement schemas, dispatched on the file's ``schema``
-field:
+One table-driven validator handles four measurement schemas, dispatched
+on the file's ``schema`` field (see :data:`SCHEMAS` -- each schema
+declares its entry fields, per-entry invariants, summary fields, and its
+baseline/fresh check functions):
 
 ``repro.jax_grid_bench/v1`` (``BENCH_jax_grid.json``)
     Perf measurements.  Baseline mode enforces the repo's acceptance
@@ -29,6 +31,15 @@ field:
     summing to 1, count + missed == n_ops at both levels, and the
     degraded-node scenario actually containing a degraded node.
 
+``repro.scenario_suite/v1`` (``BENCH_scenarios.json``)
+    Scenario-suite sweeps (``benchmarks.run --suite``).  Invariants:
+    the shared index and the per-scenario artifacts cover the same
+    scenario names with matching row counts, and every row carries a
+    positive throughput at >= 1 thread.  Row-level regression against a
+    baseline is ``tools/artifact_diff.py``'s job (the rows are
+    machine-independent on the loop backend), so fresh mode only
+    re-validates the fresh file's invariants.
+
 Two modes::
 
     python tools/check_bench.py BENCH_jax_grid.json
@@ -42,12 +53,12 @@ Two modes::
         jax/loop ratio regressed by more than ``--max-regress`` x vs
         the same-named suite in the baseline (deliberately generous --
         CI machines differ from the baseline machine; the job catches
-        order-of-magnitude regressions, not 20% noise).  For the
-        tail-latency schema the fresh file's invariants are enforced
-        directly -- they are machine-independent -- and no ratio is
-        compared.
+        order-of-magnitude regressions, not 20% noise).  For the other
+        schemas the fresh file's invariants are enforced directly --
+        they are machine-independent -- and no ratio is compared.
 
-Exit status 0 on success; 1 with a message on any failure.
+Exit status 0 on success; 1 with a message on any failure (2 for CLI
+usage errors, from argparse).
 """
 from __future__ import annotations
 
@@ -58,6 +69,7 @@ import sys
 SCHEMA = "repro.jax_grid_bench/v1"
 TAIL_SCHEMA = "repro.tail_latency_bench/v1"
 CLUSTER_SCHEMA = "repro.cluster_bench/v1"
+SUITE_SCHEMA = "repro.scenario_suite/v1"
 
 # Open-loop invariants: achieved may exceed offered only by the ramp
 # tolerance.  The first total_threads arrivals are backlogged at t=0
@@ -115,6 +127,17 @@ _HET_FIELDS = {
     "cell_steps_run": int, "steps_saved_frac": (int, float),
 }
 
+_SUITE_INDEX_FIELDS = {
+    "scenario": str, "file": str, "engine": str, "workload": str,
+    "n_rows": int, "arrival": str, "cluster_nodes": int,
+    "wall_s": (int, float),
+}
+
+_SUITE_ROW_FIELDS = {
+    "n_threads": int, "throughput": (int, float),
+    "model_throughput": (int, float),
+}
+
 # Acceptance floors enforced on the checked-in baseline.
 DEFAULT_MIN_SPEEDUP = 1.0
 MEGA_MIN_SPEEDUP = 5.0
@@ -124,21 +147,6 @@ HET_MIN_MONO_SPEEDUP = 1.5
 
 def fail(msg: str) -> None:
     sys.exit(f"check_bench: FAIL: {msg}")
-
-
-def load(path: str) -> dict:
-    try:
-        with open(path) as f:
-            doc = json.load(f)
-    except (OSError, ValueError) as e:
-        fail(f"{path}: unreadable or not JSON ({e})")
-    if isinstance(doc, dict) and doc.get("schema") == TAIL_SCHEMA:
-        validate_tail_schema(doc, path)
-    elif isinstance(doc, dict) and doc.get("schema") == CLUSTER_SCHEMA:
-        validate_cluster_schema(doc, path)
-    else:
-        validate_schema(doc, path)
-    return doc
 
 
 def _check_fields(obj: dict, fields: dict, where: str, path: str) -> None:
@@ -156,34 +164,125 @@ def _check_fields(obj: dict, fields: dict, where: str, path: str) -> None:
                  f"{type(v).__name__}")
 
 
-def validate_cluster_schema(doc: dict, path: str) -> None:
-    host = doc.get("host")
-    if not isinstance(host, dict) or "cpu_count" not in host:
-        fail(f"{path}: missing/invalid host block")
-    entries = doc.get("entries")
-    if not isinstance(entries, list) or not entries:
-        fail(f"{path}: entries must be a non-empty list")
-    for e in entries:
+# -- per-schema entry / doc validation hooks ---------------------------------
+
+def _grid_entry_extra(e: dict, tag: str, path: str) -> None:
+    if e["cells"] != e["n_latencies"] * e["n_threads"]:
+        fail(f"{path}: {tag}: cells != lats * threads")
+    for field in ("loop_s", "jax_cold_s", "jax_warm_s", "warm_speedup"):
+        if e[field] <= 0:
+            fail(f"{path}: {tag}: {field} must be > 0")
+    if e["name"].startswith("het"):
+        _check_fields(e, _HET_FIELDS, tag, path)
+        if e["cell_steps_run"] > e["cell_steps_bound"]:
+            fail(f"{path}: {tag}: cell_steps_run exceeds cell_steps_bound")
+
+
+def _cluster_entry_extra(e: dict, tag: str, path: str) -> None:
+    if len(e["nodes"]) != e["n_nodes"]:
+        fail(f"{path}: {tag}: {len(e['nodes'])} node records for "
+             f"n_nodes={e['n_nodes']}")
+    for n in e["nodes"]:
+        if not isinstance(n, dict):
+            fail(f"{path}: {tag}: node record is not an object: {n!r}")
+        _check_fields(n, _CLUSTER_NODE_FIELDS,
+                      f"{tag} node {n.get('node', '?')}", path)
+
+
+def _suite_doc_extra(doc: dict, path: str) -> None:
+    index = doc.get("index")
+    if not isinstance(index, list) or not index:
+        fail(f"{path}: index must be a non-empty list")
+    arts = doc.get("artifacts")
+    if not isinstance(arts, dict) or not arts:
+        fail(f"{path}: artifacts must be a non-empty object")
+    for e in index:
         if not isinstance(e, dict):
-            fail(f"{path}: entry is not an object: {e!r}")
-        tag = f"cluster entry {e.get('name', '?')!r} (L={e.get('L_us', '?')}us)"
-        _check_fields(e, _CLUSTER_ENTRY_FIELDS, tag, path)
-        if len(e["nodes"]) != e["n_nodes"]:
-            fail(f"{path}: {tag}: {len(e['nodes'])} node records for "
-                 f"n_nodes={e['n_nodes']}")
-        for n in e["nodes"]:
-            if not isinstance(n, dict):
-                fail(f"{path}: {tag}: node record is not an object: {n!r}")
-            _check_fields(n, _CLUSTER_NODE_FIELDS,
-                          f"{tag} node {n.get('node', '?')}", path)
-    summary = doc.get("summary")
-    if not isinstance(summary, dict) or not summary:
-        fail(f"{path}: summary must be a non-empty object")
-    for name, agg in summary.items():
-        for field in ("capacity", "offered_frac", "n_points", "n_nodes",
-                      "hottest_share", "degraded_nodes", "migrate"):
-            if field not in agg:
-                fail(f"{path}: summary {name!r} missing {field!r}")
+            fail(f"{path}: index entry is not an object: {e!r}")
+        tag = f"index entry {e.get('scenario', '?')!r}"
+        _check_fields(e, _SUITE_INDEX_FIELDS, tag, path)
+    names = [e["scenario"] for e in index]
+    if sorted(names) != sorted(arts):
+        fail(f"{path}: index scenarios {sorted(names)} do not match "
+             f"artifacts {sorted(arts)}")
+    for name, art in arts.items():
+        rows = art.get("rows") if isinstance(art, dict) else None
+        if not isinstance(rows, list) or not rows:
+            fail(f"{path}: artifact {name!r} has missing/empty rows")
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict):
+                fail(f"{path}: artifact {name!r} row {i} is not an "
+                     "object")
+            _check_fields(row, _SUITE_ROW_FIELDS,
+                          f"artifact {name!r} row {i}", path)
+
+
+# -- per-schema baseline checks (floors / invariants) ------------------------
+
+def check_floors(doc: dict, path: str) -> list[str]:
+    msgs = []
+    summary = doc["summary"]
+    if "default" in summary:
+        s = summary["default"]["warm_speedup"]
+        if s < DEFAULT_MIN_SPEEDUP:
+            fail(f"{path}: default-grid warm speedup {s}x is below the "
+                 f"{DEFAULT_MIN_SPEEDUP}x floor")
+        msgs.append(f"default grid: {s}x (floor {DEFAULT_MIN_SPEEDUP}x)")
+    if "mega" in summary:
+        s, cells = (summary["mega"]["warm_speedup"],
+                    summary["mega"]["cells"])
+        if cells < MEGA_MIN_CELLS:
+            fail(f"{path}: mega suite has {cells} cells "
+                 f"(< {MEGA_MIN_CELLS})")
+        if s < MEGA_MIN_SPEEDUP:
+            fail(f"{path}: mega-grid warm speedup {s}x is below the "
+                 f"{MEGA_MIN_SPEEDUP}x floor")
+        msgs.append(f"mega grid: {s}x over {cells} cells "
+                    f"(floor {MEGA_MIN_SPEEDUP}x)")
+    if "het" in summary:
+        agg = summary["het"]
+        if "mono_speedup" not in agg:
+            fail(f"{path}: het summary missing 'mono_speedup'")
+        s = agg["mono_speedup"]
+        if s < HET_MIN_MONO_SPEEDUP:
+            fail(f"{path}: het-grid cohort-vs-monolithic speedup {s}x is "
+                 f"below the {HET_MIN_MONO_SPEEDUP}x floor")
+        msgs.append(
+            f"het grid: cohorts {s}x over monolithic "
+            f"(floor {HET_MIN_MONO_SPEEDUP}x; early exit saved "
+            f"{agg.get('steps_saved_frac', 0):.1%} of bounded steps)")
+    return msgs
+
+
+def check_tail_invariants(doc: dict, path: str) -> list[str]:
+    """The machine-independent open-loop invariants (see module doc)."""
+    entries = doc["entries"]
+    loads = set()
+    for e in entries:
+        tag = f"{e['name']} L={e['L_us']}us @{e['offered_frac']}"
+        loads.add(e["offered_load"])
+        if e["offered_load"] <= 0:
+            fail(f"{path}: {tag}: offered_load must be > 0")
+        if e["achieved_load"] > e["offered_load"] * TAIL_RAMP_TOL:
+            fail(f"{path}: {tag}: achieved load {e['achieved_load']} "
+                 f"exceeds offered {e['offered_load']} x {TAIL_RAMP_TOL} "
+                 "-- an open-loop run cannot outrun its arrivals")
+        if not 0 < e["p50_us"] <= e["p90_us"] <= e["p99_us"] \
+                <= e["max_us"]:
+            fail(f"{path}: {tag}: percentiles not ordered "
+                 f"(p50={e['p50_us']} p90={e['p90_us']} "
+                 f"p99={e['p99_us']} max={e['max_us']})")
+        if not 0 <= e["miss_rate"] <= 1:
+            fail(f"{path}: {tag}: miss_rate {e['miss_rate']} not in "
+                 "[0, 1]")
+        if e["count"] + e["missed"] != e["n_ops"]:
+            fail(f"{path}: {tag}: count + missed != n_ops")
+    if len(loads) < TAIL_MIN_LOADS:
+        fail(f"{path}: needs >= {TAIL_MIN_LOADS} distinct offered loads, "
+             f"got {sorted(loads)}")
+    worst = max(e["p99_us"] / e["p50_us"] for e in entries)
+    return [f"{path}: open-loop invariants ok ({len(entries)} points, "
+            f"{len(loads)} offered loads, worst P99/P50 {worst:.2f}x)"]
 
 
 def check_cluster_invariants(doc: dict, path: str) -> list[str]:
@@ -239,145 +338,39 @@ def check_cluster_invariants(doc: dict, path: str) -> list[str]:
             f"{len(degraded)} degraded-node points)"]
 
 
-def validate_tail_schema(doc: dict, path: str) -> None:
-    host = doc.get("host")
-    if not isinstance(host, dict) or "cpu_count" not in host:
-        fail(f"{path}: missing/invalid host block")
-    entries = doc.get("entries")
-    if not isinstance(entries, list) or not entries:
-        fail(f"{path}: entries must be a non-empty list")
-    for e in entries:
-        if not isinstance(e, dict):
-            fail(f"{path}: entry is not an object: {e!r}")
-        for field, typ in _TAIL_ENTRY_FIELDS.items():
-            if field not in e:
-                fail(f"{path}: tail entry {e.get('name', '?')!r} "
-                     f"(L={e.get('L_us', '?')}us) missing {field!r}")
-            if not isinstance(e[field], typ) or isinstance(e[field], bool):
-                fail(f"{path}: tail entry {e['name']!r} field {field!r} "
-                     f"has type {type(e[field]).__name__}")
-    summary = doc.get("summary")
-    if not isinstance(summary, dict) or not summary:
-        fail(f"{path}: summary must be a non-empty object")
-    for name, agg in summary.items():
-        for field in ("capacity", "offered_fracs", "n_points"):
-            if field not in agg:
-                fail(f"{path}: summary {name!r} missing {field!r}")
+def check_suite_invariants(doc: dict, path: str) -> list[str]:
+    """Scenario-suite invariants: the index and the row tables agree and
+    every row is a plausible operating point."""
+    index = {e["scenario"]: e for e in doc["index"]}
+    n_cluster = 0
+    for name, art in doc["artifacts"].items():
+        rows = art["rows"]
+        if index[name]["n_rows"] != len(rows):
+            fail(f"{path}: artifact {name!r} has {len(rows)} rows but "
+                 f"the index declares {index[name]['n_rows']}")
+        for i, row in enumerate(rows):
+            tag = f"artifact {name!r} row {i}"
+            if row["throughput"] <= 0 or row["model_throughput"] <= 0:
+                fail(f"{path}: {tag}: throughput must be > 0")
+            if row["n_threads"] < 1:
+                fail(f"{path}: {tag}: n_threads must be >= 1")
+            nodes = row.get("nodes")
+            if nodes:
+                n_cluster += 1
+                if len(nodes) != index[name]["cluster_nodes"]:
+                    fail(f"{path}: {tag}: {len(nodes)} node records but "
+                         f"the index declares "
+                         f"{index[name]['cluster_nodes']} nodes")
+                share_sum = sum(n["share"] for n in nodes)
+                if abs(share_sum - 1.0) > CLUSTER_SHARE_TOL:
+                    fail(f"{path}: {tag}: node shares sum to "
+                         f"{share_sum}, not 1")
+    total = sum(len(a["rows"]) for a in doc["artifacts"].values())
+    return [f"{path}: suite invariants ok ({len(index)} scenarios, "
+            f"{total} rows, {n_cluster} cluster rows)"]
 
 
-def check_tail_invariants(doc: dict, path: str) -> list[str]:
-    """The machine-independent open-loop invariants (see module doc)."""
-    entries = doc["entries"]
-    loads = set()
-    for e in entries:
-        tag = f"{e['name']} L={e['L_us']}us @{e['offered_frac']}"
-        loads.add(e["offered_load"])
-        if e["offered_load"] <= 0:
-            fail(f"{path}: {tag}: offered_load must be > 0")
-        if e["achieved_load"] > e["offered_load"] * TAIL_RAMP_TOL:
-            fail(f"{path}: {tag}: achieved load {e['achieved_load']} "
-                 f"exceeds offered {e['offered_load']} x {TAIL_RAMP_TOL} "
-                 "-- an open-loop run cannot outrun its arrivals")
-        if not 0 < e["p50_us"] <= e["p90_us"] <= e["p99_us"] \
-                <= e["max_us"]:
-            fail(f"{path}: {tag}: percentiles not ordered "
-                 f"(p50={e['p50_us']} p90={e['p90_us']} "
-                 f"p99={e['p99_us']} max={e['max_us']})")
-        if not 0 <= e["miss_rate"] <= 1:
-            fail(f"{path}: {tag}: miss_rate {e['miss_rate']} not in "
-                 "[0, 1]")
-        if e["count"] + e["missed"] != e["n_ops"]:
-            fail(f"{path}: {tag}: count + missed != n_ops")
-    if len(loads) < TAIL_MIN_LOADS:
-        fail(f"{path}: needs >= {TAIL_MIN_LOADS} distinct offered loads, "
-             f"got {sorted(loads)}")
-    worst = max(e["p99_us"] / e["p50_us"] for e in entries)
-    return [f"{path}: open-loop invariants ok ({len(entries)} points, "
-            f"{len(loads)} offered loads, worst P99/P50 {worst:.2f}x)"]
-
-
-def validate_schema(doc: dict, path: str) -> None:
-    if not isinstance(doc, dict) or doc.get("schema") != SCHEMA:
-        fail(f"{path}: schema must be {SCHEMA!r}, {TAIL_SCHEMA!r} or "
-             f"{CLUSTER_SCHEMA!r}, "
-             f"got {doc.get('schema') if isinstance(doc, dict) else doc!r}")
-    host = doc.get("host")
-    if not isinstance(host, dict) or "cpu_count" not in host:
-        fail(f"{path}: missing/invalid host block")
-    entries = doc.get("entries")
-    if not isinstance(entries, list) or not entries:
-        fail(f"{path}: entries must be a non-empty list")
-    for e in entries:
-        if not isinstance(e, dict):
-            fail(f"{path}: entry is not an object: {e!r}")
-        for field, typ in _ENTRY_FIELDS.items():
-            if field not in e:
-                fail(f"{path}: entry {e.get('name', '?')!r} missing "
-                     f"{field!r}")
-            if not isinstance(e[field], typ) or isinstance(e[field], bool):
-                fail(f"{path}: entry {e['name']!r} field {field!r} has "
-                     f"type {type(e[field]).__name__}")
-        if e["cells"] != e["n_latencies"] * e["n_threads"]:
-            fail(f"{path}: entry {e['name']!r}: cells != lats * threads")
-        for field in ("loop_s", "jax_cold_s", "jax_warm_s",
-                      "warm_speedup"):
-            if e[field] <= 0:
-                fail(f"{path}: entry {e['name']!r}: {field} must be > 0")
-        if e["name"].startswith("het"):
-            for field, typ in _HET_FIELDS.items():
-                if field not in e:
-                    fail(f"{path}: het entry {e['name']!r} missing "
-                         f"{field!r}")
-                if (not isinstance(e[field], typ)
-                        or isinstance(e[field], bool)):
-                    fail(f"{path}: entry {e['name']!r} field {field!r} "
-                         f"has type {type(e[field]).__name__}")
-            if e["cell_steps_run"] > e["cell_steps_bound"]:
-                fail(f"{path}: entry {e['name']!r}: cell_steps_run "
-                     "exceeds cell_steps_bound")
-    summary = doc.get("summary")
-    if not isinstance(summary, dict) or not summary:
-        fail(f"{path}: summary must be a non-empty object")
-    for name, agg in summary.items():
-        for field in ("cells", "loop_s", "jax_warm_s", "warm_speedup"):
-            if field not in agg:
-                fail(f"{path}: summary {name!r} missing {field!r}")
-
-
-def check_floors(doc: dict, path: str) -> list[str]:
-    msgs = []
-    summary = doc["summary"]
-    if "default" in summary:
-        s = summary["default"]["warm_speedup"]
-        if s < DEFAULT_MIN_SPEEDUP:
-            fail(f"{path}: default-grid warm speedup {s}x is below the "
-                 f"{DEFAULT_MIN_SPEEDUP}x floor")
-        msgs.append(f"default grid: {s}x (floor {DEFAULT_MIN_SPEEDUP}x)")
-    if "mega" in summary:
-        s, cells = (summary["mega"]["warm_speedup"],
-                    summary["mega"]["cells"])
-        if cells < MEGA_MIN_CELLS:
-            fail(f"{path}: mega suite has {cells} cells "
-                 f"(< {MEGA_MIN_CELLS})")
-        if s < MEGA_MIN_SPEEDUP:
-            fail(f"{path}: mega-grid warm speedup {s}x is below the "
-                 f"{MEGA_MIN_SPEEDUP}x floor")
-        msgs.append(f"mega grid: {s}x over {cells} cells "
-                    f"(floor {MEGA_MIN_SPEEDUP}x)")
-    if "het" in summary:
-        agg = summary["het"]
-        if "mono_speedup" not in agg:
-            fail(f"{path}: het summary missing 'mono_speedup'")
-        s = agg["mono_speedup"]
-        if s < HET_MIN_MONO_SPEEDUP:
-            fail(f"{path}: het-grid cohort-vs-monolithic speedup {s}x is "
-                 f"below the {HET_MIN_MONO_SPEEDUP}x floor")
-        msgs.append(
-            f"het grid: cohorts {s}x over monolithic "
-            f"(floor {HET_MIN_MONO_SPEEDUP}x; early exit saved "
-            f"{agg.get('steps_saved_frac', 0):.1%} of bounded steps)")
-    return msgs
-
+# -- per-schema fresh-vs-baseline checks -------------------------------------
 
 def check_regression(fresh: dict, base: dict, max_regress: float) -> list:
     msgs = []
@@ -400,6 +393,144 @@ def check_regression(fresh: dict, base: dict, max_regress: float) -> list:
     return msgs
 
 
+def _fresh_invariants(check):
+    """Fresh-mode hook for schemas whose invariants are
+    machine-independent: enforce them on the fresh file directly, no
+    baseline ratio."""
+    def hook(fresh, base, fresh_path, max_regress):
+        return check(fresh, fresh_path)
+    return hook
+
+
+def _fresh_grid(fresh, base, fresh_path, max_regress):
+    return check_regression(fresh, base, max_regress)
+
+
+def _fresh_suite(fresh, base, fresh_path, max_regress):
+    # Row-level drift vs the baseline is artifact_diff's job; here only
+    # the fresh file's own invariants are enforceable.
+    return (check_suite_invariants(fresh, fresh_path)
+            + ["suite rows: compare vs the baseline with "
+               "tools/artifact_diff.py"])
+
+
+# -- the schema table --------------------------------------------------------
+
+class SchemaSpec:
+    """Everything schema-specific, as one table row: entry shape,
+    per-entry and per-document validation hooks, summary fields, and the
+    baseline/fresh check functions."""
+
+    def __init__(self, name, summary_fields, baseline_check, fresh_check,
+                 entry_fields=None, entry_tag=None, entry_extra=None,
+                 doc_extra=None, size=None, flat_summary=False):
+        self.name = name
+        self.entry_fields = entry_fields
+        self.entry_tag = entry_tag or (
+            lambda e: f"entry {e.get('name', '?')!r}")
+        self.entry_extra = entry_extra
+        self.summary_fields = summary_fields
+        # flat_summary: summary is one object of aggregate fields (the
+        # suite schema) rather than a per-suite mapping of objects.
+        self.flat_summary = flat_summary
+        self.doc_extra = doc_extra
+        self.baseline_check = baseline_check
+        self.fresh_check = fresh_check
+        self.size = size or (lambda d: f"{len(d['entries'])} entries")
+
+    def validate(self, doc: dict, path: str) -> None:
+        host = doc.get("host")
+        if not isinstance(host, dict) or "cpu_count" not in host:
+            fail(f"{path}: missing/invalid host block")
+        if self.entry_fields is not None:
+            entries = doc.get("entries")
+            if not isinstance(entries, list) or not entries:
+                fail(f"{path}: entries must be a non-empty list")
+            for e in entries:
+                if not isinstance(e, dict):
+                    fail(f"{path}: entry is not an object: {e!r}")
+                tag = self.entry_tag(e)
+                _check_fields(e, self.entry_fields, tag, path)
+                if self.entry_extra is not None:
+                    self.entry_extra(e, tag, path)
+        summary = doc.get("summary")
+        if not isinstance(summary, dict) or not summary:
+            fail(f"{path}: summary must be a non-empty object")
+        if self.flat_summary:
+            for field in self.summary_fields:
+                if field not in summary:
+                    fail(f"{path}: summary missing {field!r}")
+        else:
+            for name, agg in summary.items():
+                if not isinstance(agg, dict):
+                    fail(f"{path}: summary {name!r} is not an object")
+                for field in self.summary_fields:
+                    if field not in agg:
+                        fail(f"{path}: summary {name!r} missing {field!r}")
+        if self.doc_extra is not None:
+            self.doc_extra(doc, path)
+
+
+def _tag_with_lat(kind):
+    return lambda e: (f"{kind} entry {e.get('name', '?')!r} "
+                      f"(L={e.get('L_us', '?')}us)")
+
+
+SCHEMAS: dict[str, SchemaSpec] = {
+    SCHEMA: SchemaSpec(
+        SCHEMA,
+        entry_fields=_ENTRY_FIELDS,
+        entry_extra=_grid_entry_extra,
+        summary_fields=("cells", "loop_s", "jax_warm_s", "warm_speedup"),
+        baseline_check=check_floors,
+        fresh_check=_fresh_grid,
+    ),
+    TAIL_SCHEMA: SchemaSpec(
+        TAIL_SCHEMA,
+        entry_fields=_TAIL_ENTRY_FIELDS,
+        entry_tag=_tag_with_lat("tail"),
+        summary_fields=("capacity", "offered_fracs", "n_points"),
+        baseline_check=check_tail_invariants,
+        fresh_check=_fresh_invariants(check_tail_invariants),
+    ),
+    CLUSTER_SCHEMA: SchemaSpec(
+        CLUSTER_SCHEMA,
+        entry_fields=_CLUSTER_ENTRY_FIELDS,
+        entry_tag=_tag_with_lat("cluster"),
+        entry_extra=_cluster_entry_extra,
+        summary_fields=("capacity", "offered_frac", "n_points", "n_nodes",
+                        "hottest_share", "degraded_nodes", "migrate"),
+        baseline_check=check_cluster_invariants,
+        fresh_check=_fresh_invariants(check_cluster_invariants),
+    ),
+    SUITE_SCHEMA: SchemaSpec(
+        SUITE_SCHEMA,
+        summary_fields=("n_scenarios", "total_rows", "total_wall_s"),
+        flat_summary=True,
+        doc_extra=_suite_doc_extra,
+        baseline_check=check_suite_invariants,
+        fresh_check=_fresh_suite,
+        size=lambda d: (f"{len(d['artifacts'])} scenarios, "
+                        f"{sum(len(a['rows']) for a in d['artifacts'].values())} rows"),
+    ),
+}
+
+
+def load(path: str) -> tuple[dict, SchemaSpec]:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{path}: unreadable or not JSON ({e})")
+    got = doc.get("schema") if isinstance(doc, dict) else doc
+    spec = SCHEMAS.get(got) if isinstance(got, str) else None
+    if spec is None:
+        fail(f"{path}: schema must be one of {sorted(SCHEMAS)}, "
+             f"got {got!r}")
+    spec.validate(doc, path)
+    return doc, spec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline_pos", nargs="?", default=None,
@@ -416,30 +547,18 @@ def main() -> None:
     baseline_path = args.baseline or args.baseline_pos
     if baseline_path is None:
         ap.error("need a baseline file (positional or --baseline)")
-    base = load(baseline_path)
-    msgs = [f"{baseline_path}: schema ok "
-            f"({len(base['entries'])} entries)"]
-    if base["schema"] == TAIL_SCHEMA:
-        msgs += check_tail_invariants(base, baseline_path)
-    elif base["schema"] == CLUSTER_SCHEMA:
-        msgs += check_cluster_invariants(base, baseline_path)
-    else:
-        msgs += check_floors(base, baseline_path)
+    base, spec = load(baseline_path)
+    msgs = [f"{baseline_path}: schema ok ({spec.size(base)})"]
+    msgs += spec.baseline_check(base, baseline_path)
 
     if args.fresh:
-        fresh = load(args.fresh)
+        fresh, fresh_spec = load(args.fresh)
         msgs.append(f"{args.fresh}: schema ok")
-        if fresh["schema"] != base["schema"]:
-            fail(f"{args.fresh}: schema {fresh['schema']!r} does not "
-                 f"match baseline {base['schema']!r}")
-        if base["schema"] == TAIL_SCHEMA:
-            # tail/cluster invariants are machine-independent: enforce
-            # them on the fresh measurement directly, no baseline ratio
-            msgs += check_tail_invariants(fresh, args.fresh)
-        elif base["schema"] == CLUSTER_SCHEMA:
-            msgs += check_cluster_invariants(fresh, args.fresh)
-        else:
-            msgs += check_regression(fresh, base, args.max_regress)
+        if fresh_spec.name != spec.name:
+            fail(f"{args.fresh}: schema {fresh_spec.name!r} does not "
+                 f"match baseline {spec.name!r}")
+        msgs += spec.fresh_check(fresh, base, args.fresh,
+                                 args.max_regress)
 
     for m in msgs:
         print(f"check_bench: {m}")
